@@ -1,0 +1,49 @@
+"""§5.2 ablations: decay coefficient λ (Fig. 5), target LR (Fig. 6),
+weight initialisation (Fig. 7)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, write_csv
+from benchmarks.paper_runs import run_classification
+from repro.models.cnn import INITS
+
+
+def lambda_ablation() -> None:
+    rows = []
+    for batch in (256, 1024):          # stand-ins for 1K / 16K
+        for lam in (1e-2, 5e-3, 1e-3, 1e-4, 1e-5):
+            acc, hist, _ = run_classification("tvlars", batch, 1.0,
+                                              lam=lam)
+            rows.append((batch, lam, round(acc, 4),
+                         round(hist[-1]["loss"], 4)))
+            emit(f"fig5/lambda/B{batch}/lam{lam}", 0.0, f"acc={acc:.4f}")
+    write_csv("fig5_lambda", ["batch", "lambda", "accuracy", "loss"], rows)
+
+
+def lr_ablation() -> None:
+    rows = []
+    for lr in (0.1, 0.3, 0.6, 1.0, 1.5):
+        acc, hist, _ = run_classification("tvlars", 512, lr)
+        rows.append((512, lr, round(acc, 4), round(hist[-1]["loss"], 4)))
+        emit(f"fig6/lr{lr}", 0.0, f"acc={acc:.4f}")
+    write_csv("fig6_lr", ["batch", "lr", "accuracy", "loss"], rows)
+
+
+def init_ablation() -> None:
+    rows = []
+    for method in INITS:
+        for opt in ("wa-lars", "tvlars"):
+            acc, _, _ = run_classification(opt, 512, 0.8,
+                                           init_method=method)
+            rows.append((method, opt, round(acc, 4)))
+            emit(f"fig7/{method}/{opt}", 0.0, f"acc={acc:.4f}")
+    write_csv("fig7_init", ["init", "optimizer", "accuracy"], rows)
+
+
+def main() -> None:
+    lambda_ablation()
+    lr_ablation()
+    init_ablation()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""§Roofline: three-term roofline per (arch × input shape) from the
+dry-run's compiled artifacts (single-pod 16×16 mesh).
+
+    compute term    = structural_FLOPs_per_device / peak_FLOP/s
+    memory term     = structural_bytes_per_device / HBM_bw
+    collective term = structural_collective_bytes_per_device / link_bw
+
+Structural quantities are trip-count-weighted from the post-SPMD HLO
+(hlo_analysis.py) because compiled.cost_analysis() counts while-loop
+bodies once. MODEL_FLOPS = 6·N(_active)·D tokens for training,
+2·N·D for prefill, 2·N·B for one decode step.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, write_csv
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops_per_device(arch: str, shape: str, num_devices: int
+                           ) -> float:
+    cfg = get_config(arch)
+    spec = INPUT_SHAPES[shape]
+    n_active = cfg.param_count(active_only=True)
+    b, s = spec["global_batch"], spec["seq_len"]
+    if spec["kind"] == "train":
+        total = 6.0 * n_active * b * s
+    elif spec["kind"] == "prefill":
+        total = 2.0 * n_active * b * s
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * b
+    return total / num_devices
+
+
+def load(mesh: str = "single") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        out.append(d)
+    return out
+
+
+def roofline_rows(mesh: str = "single") -> list[dict]:
+    rows = []
+    for d in load(mesh):
+        if d["status"] != "ok":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "status": "skipped", "reason": d.get("reason", "")})
+            continue
+        s = d["structural"]
+        nd = d["num_devices"]
+        t_c = s["flops"] / PEAK_FLOPS
+        t_m = s["bytes"] / HBM_BW
+        t_n = s["collective_total_bytes"] / LINK_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops_per_device(d["arch"], d["shape"], nd)
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "status": "ok",
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "dominant": dom,
+            "model_flops_per_dev": mf,
+            "hlo_flops_per_dev": s["flops"],
+            "useful_ratio": mf / s["flops"] if s["flops"] else 0.0,
+            "mem_gib": d["memory"]["total_bytes_per_device"] / 2**30,
+            "mem_gib_tpu_adj": max(
+                d["memory"]["tpu_adjusted_bytes_per_device"],
+                # floor: args+outputs always resident
+                d["memory"].get("argument_size_in_bytes", 0)
+                + d["memory"].get("output_size_in_bytes", 0)
+                - d["memory"].get("alias_size_in_bytes", 0)) / 2**30,
+        })
+    return rows
+
+
+def main() -> None:
+    rows = roofline_rows("single")
+    csv_rows = []
+    for r in rows:
+        if r["status"] != "ok":
+            csv_rows.append((r["arch"], r["shape"], "SKIP", "", "", "", "",
+                             "", "", r.get("reason", "")))
+            continue
+        csv_rows.append((r["arch"], r["shape"], r["dominant"],
+                         f"{r['compute_s']:.4f}", f"{r['memory_s']:.4f}",
+                         f"{r['collective_s']:.4f}",
+                         f"{r['useful_ratio']:.3f}",
+                         f"{r['mem_gib']:.2f}",
+                         f"{r['mem_gib_tpu_adj']:.2f}", ""))
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             r["collective_s"] * 1e6 if r["dominant"] == "collective"
+             else max(r["compute_s"], r["memory_s"]) * 1e6,
+             f"dominant={r['dominant']} useful={r['useful_ratio']:.2f}")
+    path = write_csv("roofline_single_pod",
+                     ["arch", "shape", "dominant", "compute_s", "memory_s",
+                      "collective_s", "model/hlo_flops", "mem_gib_raw",
+                      "mem_gib_tpu_adj", "note"], csv_rows)
+    emit("roofline/summary", 0.0, path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Table 1 (SSL half): Barlow-Twins pre-train + linear probe,
+LARS vs LAMB vs TVLARS."""
+from __future__ import annotations
+
+from benchmarks.common import emit, write_csv
+from benchmarks.paper_runs import run_ssl
+
+
+def main() -> None:
+    rows = []
+    for batch in (256, 512):
+        for opt in ("wa-lars", "lamb", "tvlars"):
+            acc = run_ssl(opt, batch, 0.8)
+            rows.append((opt, batch, round(acc, 4)))
+            emit(f"ssl/{opt}/B{batch}", 0.0, f"probe_acc={acc:.4f}")
+    path = write_csv("table1_ssl", ["optimizer", "batch", "probe_acc"],
+                     rows)
+    emit("ssl/summary", 0.0, path)
+
+
+if __name__ == "__main__":
+    main()

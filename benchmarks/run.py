@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines; full grids land in
+``experiments/bench/*.csv``.
+
+  table1        Table 1 (classification): LARS/LAMB/TVLARS × B × LR
+  ssl           Table 1 (Barlow-Twins SSL half)
+  schedules     Figures 1 & 4: warm-up vs TVLARS φ_t family
+  fig2          Figure 2: LWN/LGN/LNR traces (WA/NOWA-LARS, TVLARS)
+  ablations     §5.2: λ sweep (Fig 5), target LR (Fig 6), init (Fig 7)
+  kernels       Pallas kernel micro-benchmarks
+  roofline      §Roofline terms from the dry-run artifacts
+
+Usage: python -m benchmarks.run [suite ...]   (default: all)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = ("schedules", "kernels", "roofline", "fig2", "table1",
+          "ablations", "ssl")
+
+
+def run_suite(name: str) -> None:
+    t0 = time.perf_counter()
+    print(f"# --- {name} ---")
+    if name == "table1":
+        from benchmarks import bench_table1 as mod
+    elif name == "ssl":
+        from benchmarks import bench_ssl as mod
+    elif name == "schedules":
+        from benchmarks import bench_schedules as mod
+    elif name == "fig2":
+        from benchmarks import bench_fig2_lnr as mod
+    elif name == "ablations":
+        from benchmarks import bench_ablations as mod
+    elif name == "kernels":
+        from benchmarks import bench_kernels as mod
+    elif name == "roofline":
+        from benchmarks import bench_roofline as mod
+    else:
+        raise ValueError(f"unknown suite {name!r}; one of {SUITES}")
+    mod.main()
+    print(f"# {name} done in {time.perf_counter()-t0:.1f}s")
+
+
+def main() -> None:
+    suites = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for s in suites:
+        run_suite(s)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Pytree checkpointer — msgpack metadata + npz tensor payload.
+
+No orbax offline, so this is a small self-contained implementation:
+``save(path, tree)`` / ``restore(path, like=tree)``. Leaf order is the
+tree-flatten order of the structure; ``like`` must match (the usual
+"restore into an abstract state" pattern). Atomic via tmp + rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def save(path: str, tree: Any, *, step: Optional[int] = None) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {}
+    dtypes = {}
+    shapes = {}
+    for i, x in enumerate(leaves):
+        arr = np.asarray(x)
+        dtypes[f"leaf_{i}"] = str(arr.dtype)
+        shapes[f"leaf_{i}"] = list(arr.shape)
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # npz cannot store ml_dtypes (bfloat16 etc.) — byte-view them
+            arr = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+        arrays[f"leaf_{i}"] = arr
+    meta = {"num_leaves": len(leaves), "treedef": str(treedef),
+            "step": step, "dtypes": dtypes, "shapes": shapes}
+    os.makedirs(path, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".npz.tmp")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like: Any) -> Any:
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if meta["num_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {meta['num_leaves']} leaves, template has "
+            f"{len(leaves)}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    dtypes = meta.get("dtypes", {})
+    new_leaves = []
+    for i, template in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        want = dtypes.get(f"leaf_{i}")
+        if want and str(arr.dtype) != want:
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
+            arr = arr.reshape(meta["shapes"][f"leaf_{i}"])
+        if template is not None and hasattr(template, "shape") \
+                and tuple(arr.shape) != tuple(template.shape):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != template "
+                f"{template.shape}")
+        new_leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def latest_step(path: str) -> Optional[int]:
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

@@ -1,0 +1,9 @@
+"""repro.configs — architecture configs + assigned input shapes."""
+from repro.configs.base import FAMILIES, INPUT_SHAPES, ModelConfig
+from repro.configs.registry import (ARCH_IDS, LONG_CONTEXT_SKIP, get_config,
+                                    get_smoke_config, input_specs,
+                                    supports_shape)
+
+__all__ = ["FAMILIES", "INPUT_SHAPES", "ModelConfig", "ARCH_IDS",
+           "LONG_CONTEXT_SKIP", "get_config", "get_smoke_config",
+           "input_specs", "supports_shape"]

@@ -1,0 +1,32 @@
+"""qwen3-moe-30b-a3b [moe] — hf:Qwen/Qwen3-30B-A3B.
+
+48 layers, d_model=2048, 32 heads (GQA kv=4, head_dim=128),
+128 experts top-8 with per-expert d_ff=768, vocab=151936.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen3-moe-30b-a3b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=768,                 # per-expert intermediate
+    vocab_size=151936,
+    num_experts=128,
+    experts_per_token=8,
+    rope_theta=1000000.0,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=64, vocab_size=512, num_experts=4,
+        experts_per_token=2, param_dtype="float32",
+        compute_dtype="float32", remat=False)

@@ -1,0 +1,91 @@
+"""Architecture registry + assigned input shapes.
+
+``get_config("qwen2-72b")`` / ``get_smoke_config(...)`` resolve the
+assigned architectures; ``input_specs(cfg, shape_name)`` builds the
+ShapeDtypeStruct stand-ins for the dry-run (no device allocation).
+
+long_500k applicability (DESIGN.md §4): sub-quadratic attention is
+required at seq=524288; pure full-attention decoders are skipped with a
+recorded reason.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+
+ARCH_MODULES = {
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "codeqwen1.5-7b": "repro.configs.codeqwen1_5_7b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+}
+
+ARCH_IDS = tuple(ARCH_MODULES)
+
+# why long_500k is skipped for pure full-attention archs
+LONG_CONTEXT_SKIP = {
+    "llama-3.2-vision-11b": "pure full-attention decoder (cross-attn adds "
+                            "no windowing); no sub-quadratic variant",
+    "whisper-large-v3": "full-attention decoder; architecture caps at 448 "
+                        "decoder positions",
+    "codeqwen1.5-7b": "pure full-attention decoder",
+    "qwen2-72b": "pure full-attention decoder",
+    "qwen2.5-3b": "pure full-attention decoder",
+    "qwen3-moe-30b-a3b": "full-attention decoder (MoE is FFN-level)",
+    "olmoe-1b-7b": "full-attention decoder (MoE is FFN-level)",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_MODULES:
+        raise ValueError(f"unknown arch {arch_id!r}; one of {ARCH_IDS}")
+    return importlib.import_module(ARCH_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(ARCH_MODULES[arch_id]).smoke_config()
+
+
+def supports_shape(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch, input-shape) pair."""
+    if shape_name == "long_500k" and cfg.arch_id in LONG_CONTEXT_SKIP:
+        return False, LONG_CONTEXT_SKIP[cfg.arch_id]
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the shape.
+
+    train/prefill: {tokens, labels?, extra_embeds?}
+    decode:        {tokens [B,1], pos}  (the KV cache is built separately
+                   via jax.eval_shape over model.init_cache)
+    """
+    spec = INPUT_SHAPES[shape_name]
+    b, s, kind = spec["global_batch"], spec["seq_len"], spec["kind"]
+    sd = jax.ShapeDtypeStruct
+    out: dict = {}
+    if kind == "decode":
+        out["tokens"] = sd((b, 1), jnp.int32)
+        out["pos"] = sd((), jnp.int32)
+    else:
+        out["tokens"] = sd((b, s), jnp.int32)
+        if kind == "train":
+            out["labels"] = sd((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        out["extra_embeds"] = sd((b, cfg.num_image_tokens, cfg.d_model),
+                                 cfg.cdtype)
+    elif cfg.family == "encdec":
+        out["extra_embeds"] = sd((b, cfg.encoder_seq, cfg.d_model),
+                                 cfg.cdtype)
+    return out

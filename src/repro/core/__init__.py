@@ -1,0 +1,25 @@
+"""repro.core — layer-wise adaptive large-batch optimizers (the paper).
+
+Public API:
+    build_optimizer          factory by name ("tvlars", "wa-lars", ...)
+    lars / lamb / tvlars / sgd   explicit constructors
+    apply_updates / chain / GradientTransform   pytree transform plumbing
+    schedules                warm-up+cosine, polynomial, tvlars_phi
+    layer_norms / NormRecorder   LWN/LGN/LNR telemetry (Fig. 2)
+"""
+from repro.core.api import OPTIMIZERS, build_optimizer
+from repro.core.base import (GradientTransform, apply_updates, chain,
+                             clip_by_global_norm, global_norm, safe_norm)
+from repro.core.instrumentation import LayerNorms, NormRecorder, layer_norms
+from repro.core.lamb import lamb
+from repro.core.lars import lars
+from repro.core.sgd import sgd
+from repro.core.tvlars import tvlars
+from repro.core import labels, schedules
+
+__all__ = [
+    "OPTIMIZERS", "build_optimizer", "GradientTransform", "apply_updates",
+    "chain", "clip_by_global_norm", "global_norm", "safe_norm",
+    "LayerNorms", "NormRecorder", "layer_norms", "lamb", "lars", "sgd",
+    "tvlars", "labels", "schedules",
+]

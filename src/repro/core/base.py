@@ -1,0 +1,158 @@
+"""Optax-style gradient-transformation API in pure JAX.
+
+The whole optimizer library is built from a single abstraction:
+
+    GradientTransform(init, update)
+
+where ``init(params) -> state`` and
+``update(grads, state, params) -> (updates, new_state)``.
+``updates`` are *deltas* applied as ``params + updates`` (note the sign:
+descent transforms return negative-scaled gradients).
+
+Everything is a pytree; the transforms are jit/pjit/shard_map friendly
+and all norm reductions lower to per-shard partials + all-reduce under
+a sharded mesh (this is how the layer-wise optimizers participate in the
+distributed roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class GradientTransform(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple[PyTree, PyTree]]
+
+
+class EmptyState(NamedTuple):
+    """State for stateless transforms."""
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """``params + updates`` leaf-wise, preserving dtypes."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if p is not None else None,
+        params, updates)
+
+
+def chain(*transforms: GradientTransform) -> GradientTransform:
+    """Compose transforms left-to-right (like optax.chain)."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransform(init, update)
+
+
+def identity() -> GradientTransform:
+    return GradientTransform(
+        lambda params: EmptyState(),
+        lambda g, s, p=None: (g, s))
+
+
+class ScaleByScheduleState(NamedTuple):
+    step: jnp.ndarray
+
+
+def scale(factor: float) -> GradientTransform:
+    return GradientTransform(
+        lambda params: EmptyState(),
+        lambda g, s, p=None: (
+            jax.tree_util.tree_map(lambda x: x * factor, g), s))
+
+
+def scale_by_schedule(schedule: Callable[[jnp.ndarray], jnp.ndarray]
+                      ) -> GradientTransform:
+    """Multiply updates by ``schedule(step)``; step counts update calls."""
+
+    def init(params):
+        return ScaleByScheduleState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        factor = schedule(state.step)
+        out = jax.tree_util.tree_map(lambda x: x * factor, grads)
+        return out, ScaleByScheduleState(step=state.step + 1)
+
+    return GradientTransform(init, update)
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransform:
+    """g <- g + wd * w (decoupled-from-schedule L2, as in Eq. (1))."""
+
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError("add_decayed_weights requires params")
+        out = jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p, grads, params)
+        return out, state
+
+    return GradientTransform(lambda p: EmptyState(), update)
+
+
+class TraceState(NamedTuple):
+    momentum: PyTree
+
+
+def trace(decay: float, nesterov: bool = False) -> GradientTransform:
+    """Momentum accumulation m <- decay*m + g  (returns m or g+decay*m)."""
+
+    def init(params):
+        return TraceState(momentum=jax.tree_util.tree_map(
+            jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        m = jax.tree_util.tree_map(
+            lambda g, m: decay * m + g, grads, state.momentum)
+        if nesterov:
+            out = jax.tree_util.tree_map(lambda g, m_: g + decay * m_, grads, m)
+        else:
+            out = m
+        return out, TraceState(momentum=m)
+
+    return GradientTransform(init, update)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransform:
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        out = jax.tree_util.tree_map(lambda g: g * factor, grads)
+        return out, state
+
+    return GradientTransform(lambda p: EmptyState(), update)
+
+
+def safe_norm(x: jnp.ndarray, eps: float = 0.0) -> jnp.ndarray:
+    """L2 norm in f32 accumulation regardless of input dtype."""
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))) + eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """Config-system handle: name + hyperparams -> GradientTransform."""
+    name: str
+    hyper: dict
+
+    def build(self, total_steps: int) -> GradientTransform:
+        from repro.core import api  # local import avoids cycle
+        return api.build_optimizer(self.name, total_steps=total_steps,
+                                   **self.hyper)

@@ -1,0 +1,80 @@
+"""LWN / LGN / LNR telemetry — the paper's analysis instrument (Fig. 2).
+
+For every parameter leaf k at step t we can log:
+
+    LWN_k = ‖w^k‖            (layer weight norm)
+    LGN_k = ‖∇L(w^k)‖        (layer gradient norm)
+    LNR_k = LWN_k / LGN_k    (layer normalization ratio, Hartley analogy)
+
+``layer_norms`` is jit-safe (returns stacked arrays); ``NormRecorder``
+accumulates host-side history for the benchmark plots/CSVs that
+reproduce Figures 2, 15–26.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labels as labels_lib
+from repro.core.base import PyTree, safe_norm
+
+
+class LayerNorms(NamedTuple):
+    lwn: jnp.ndarray  # [num_leaves]
+    lgn: jnp.ndarray  # [num_leaves]
+    lnr: jnp.ndarray  # [num_leaves]
+
+
+def layer_norms(params: PyTree, grads: PyTree, eps: float = 1e-12
+                ) -> LayerNorms:
+    """Per-leaf LWN/LGN/LNR, stacked in tree-flatten order (jit-safe)."""
+    w_leaves = jax.tree_util.tree_leaves(params)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+    lwn = jnp.stack([safe_norm(w) for w in w_leaves])
+    lgn = jnp.stack([safe_norm(g) for g in g_leaves])
+    return LayerNorms(lwn=lwn, lgn=lgn, lnr=lwn / (lgn + eps))
+
+
+class NormRecorder:
+    """Host-side history of layer norms across steps (Fig. 2 reproduction)."""
+
+    def __init__(self, params: PyTree):
+        self.names = labels_lib.leaf_names(params)
+        self.steps: list[int] = []
+        self.history: list[LayerNorms] = []
+
+    def record(self, step: int, norms: LayerNorms) -> None:
+        self.steps.append(int(step))
+        self.history.append(jax.device_get(norms))
+
+    def as_arrays(self) -> dict[str, np.ndarray]:
+        """Returns {lwn,lgn,lnr}: [steps, leaves] float arrays."""
+        if not self.history:
+            return {k: np.zeros((0, len(self.names)))
+                    for k in ("lwn", "lgn", "lnr")}
+        return {
+            "lwn": np.stack([h.lwn for h in self.history]),
+            "lgn": np.stack([h.lgn for h in self.history]),
+            "lnr": np.stack([h.lnr for h in self.history]),
+        }
+
+    def summary(self) -> dict[str, Any]:
+        """Aggregates the paper reports: max initial LNR, LNR decline."""
+        arr = self.as_arrays()
+        if arr["lnr"].shape[0] == 0:
+            return {}
+        mean_lnr = arr["lnr"].mean(axis=1)          # [steps]
+        n = len(mean_lnr)
+        head = mean_lnr[: max(1, n // 5)]
+        tail = mean_lnr[-max(1, n // 5):]
+        return {
+            "max_initial_lnr": float(head.max()),
+            "mean_initial_lnr": float(head.mean()),
+            "mean_final_lnr": float(tail.mean()),
+            "lnr_decline": float(head.mean() - tail.mean()),
+            "mean_final_lwn": float(arr["lwn"].mean(axis=1)[-1]),
+            "lnr_variance": float(mean_lnr.var()),
+        }

@@ -1,0 +1,43 @@
+"""Parameter-tree labelling.
+
+LARS-family reference implementations (NVCaffe / Lightning-Flash, cited
+in Appendix B) *exclude* 1-D parameters (biases, norm scales) from the
+trust-ratio scaling and weight decay — they get the plain base LR. We
+reproduce that behaviour via a label tree: every leaf is tagged
+``"adapt"`` (trust-ratio scaled) or ``"plain"``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+PyTree = Any
+
+ADAPT = "adapt"
+PLAIN = "plain"
+
+
+def default_labels(params: PyTree) -> PyTree:
+    """Tag >=2-D leaves as ADAPT, 1-D/0-D (bias, norm scale) as PLAIN."""
+    return jax.tree_util.tree_map(
+        lambda p: ADAPT if p.ndim >= 2 else PLAIN, params)
+
+
+def leaf_names(params: PyTree) -> list[str]:
+    """Stable '/'-joined key-path name per leaf (for telemetry tables)."""
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    names = []
+    for path, _ in paths:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                parts.append(p.name)
+            else:
+                parts.append(str(p))
+        names.append("/".join(parts))
+    return names

@@ -1,0 +1,81 @@
+"""LAMB — Layer-wise Adaptive Moments for Batch training (You et al. 2020).
+
+Adam moments + layer-wise trust ratio:
+
+    m ← β1·m + (1−β1)·g            v ← β2·v + (1−β2)·g²
+    m̂ = m/(1−β1^t)                 v̂ = v/(1−β2^t)
+    r  = m̂/(√v̂ + eps) + wd·w
+    w ← w − lr · φ(‖w‖)/‖r‖ · r,    φ(z)=z (optionally clipped)
+
+1-D params bypass the trust ratio (labels.py), as in the cited
+pytorch-optimizer reference implementation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import labels as labels_lib
+from repro.core.base import GradientTransform, PyTree, safe_norm
+from repro.core.schedules import Schedule
+
+
+class LambState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def lamb(learning_rate: Schedule, *, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-6, weight_decay: float = 5e-4,
+         trust_clip: Optional[float] = 10.0,
+         param_labels: Optional[PyTree] = None) -> GradientTransform:
+
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return LambState(step=jnp.zeros((), jnp.int32), mu=z,
+                         nu=jax.tree_util.tree_map(jnp.copy, z))
+
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError("lamb requires params")
+        lab = param_labels if param_labels is not None \
+            else labels_lib.default_labels(params)
+        step = state.step + 1
+        base_lr = learning_rate(state.step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def moments(g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            new_mu = b1 * mu + (1.0 - b1) * g32
+            new_nu = b2 * nu + (1.0 - b2) * jnp.square(g32)
+            return new_mu, new_nu
+
+        mo = jax.tree_util.tree_map(moments, grads, state.mu, state.nu)
+        is_pair = lambda x: isinstance(x, tuple)
+        new_mu = jax.tree_util.tree_map(lambda o: o[0], mo, is_leaf=is_pair)
+        new_nu = jax.tree_util.tree_map(lambda o: o[1], mo, is_leaf=is_pair)
+
+        def per_leaf(mu, nu, w, tag):
+            w32 = w.astype(jnp.float32)
+            r = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            if tag == labels_lib.ADAPT:
+                r = r + weight_decay * w32
+                w_norm = safe_norm(w32)
+                r_norm = safe_norm(r)
+                ratio = jnp.where((w_norm > 0.0) & (r_norm > 0.0),
+                                  w_norm / r_norm, 1.0)
+                if trust_clip is not None:
+                    ratio = jnp.minimum(ratio, trust_clip)
+            else:
+                ratio = 1.0
+            return -base_lr * ratio * r
+
+        updates = jax.tree_util.tree_map(per_leaf, new_mu, new_nu, params, lab)
+        return updates, LambState(step=step, mu=new_mu, nu=new_nu)
+
+    return GradientTransform(init, update)

@@ -1,0 +1,95 @@
+"""Learning-rate schedules used by the paper.
+
+All schedules are step-indexed pure functions ``f(step) -> scalar`` safe
+under jit (step is a traced int32 scalar).
+
+The paper's schedules:
+
+* ``warmup_cosine``  — WA-LARS / WA-LAMB (Eq. 4 + Appendix B): linear
+  0 -> γ_target over ``d_wa`` steps, then cosine anneal
+  γ_t = γ_target·q + γ_min·(1−q),  q = ½(1+cos(πt/T)).
+* ``polynomial``     — NOWA-LARS baseline decay (Appendix B).
+* ``tvlars_phi``     — Eq. 5: φ_t = 1/(α+exp(λ(t−d_e))) + γ_min. TVLARS
+  uses γ_target·φ_t as its time-varying base LR and NO external scheduler.
+* ``sqrt_scaling``   — Krizhevsky/Granziol batch-size rule
+  γ_scale = γ_tuning · sqrt(B/B_base) (§5.2.2); the linear-scaling variant
+  B/B_base (Goyal et al.) is also provided.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  min_lr: float = 0.0) -> Schedule:
+    """Eq. (4): linear warm-up to ``peak_lr`` then cosine anneal to min_lr."""
+    warmup_steps = max(int(warmup_steps), 1)
+    decay_steps = max(int(total_steps) - warmup_steps, 1)
+
+    def f(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / warmup_steps
+        t = jnp.clip((step - warmup_steps) / decay_steps, 0.0, 1.0)
+        q = 0.5 * (1.0 + jnp.cos(math.pi * t))
+        cos = peak_lr * q + min_lr * (1.0 - q)
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return f
+
+
+def polynomial(peak_lr: float, total_steps: int, power: float = 2.0,
+               min_lr: float = 0.0) -> Schedule:
+    """Polynomial decay (Codreanu et al.; NOWA-LARS baseline)."""
+    total_steps = max(int(total_steps), 1)
+
+    def f(step):
+        t = jnp.clip(jnp.asarray(step, jnp.float32) / total_steps, 0.0, 1.0)
+        return (peak_lr - min_lr) * (1.0 - t) ** power + min_lr
+
+    return f
+
+
+def tvlars_phi(lam: float, delay_steps: int, alpha: float = 1.0,
+               gamma_min: float = 0.0) -> Schedule:
+    """Eq. (5): φ_t = 1/(α + exp(λ(t − d_e))) + γ_min.
+
+    Bounds (Eq. 6):  γ_min ≤ φ_t ≤ 1/(α + exp(−λ·d_e)).
+    ``exp`` is clamped to avoid overflow for large λ·t (φ→γ_min there
+    anyway).
+    """
+
+    def f(step):
+        psi = lam * (jnp.asarray(step, jnp.float32) - delay_steps)
+        psi = jnp.clip(psi, -60.0, 60.0)
+        return 1.0 / (alpha + jnp.exp(psi)) + gamma_min
+
+    return f
+
+
+def tvlars_phi_bounds(lam: float, delay_steps: int, alpha: float = 1.0,
+                      gamma_min: float = 0.0) -> tuple[float, float]:
+    """Closed-form (lower, upper) bounds of φ_t from Eq. (6)/Appendix D."""
+    upper = 1.0 / (alpha + math.exp(max(-60.0, min(60.0, -lam * delay_steps))))
+    return gamma_min, upper + gamma_min
+
+
+def sqrt_scaling(base_lr: float, batch_size: int, base_batch_size: int
+                 ) -> float:
+    """γ = ε·sqrt(B/B_base)  (Krizhevsky 2014; §5.2.2)."""
+    return base_lr * math.sqrt(batch_size / base_batch_size)
+
+
+def linear_scaling(base_lr: float, batch_size: int, base_batch_size: int
+                   ) -> float:
+    """γ = ε·(B/B_base)  (Goyal et al. 2018; used for γ_scale in Eq. 2)."""
+    return base_lr * batch_size / base_batch_size

@@ -1,0 +1,46 @@
+"""SGD + momentum (Kiefer & Wolfowitz 1952) — small-batch baseline and
+the Barlow-Twins CLF-stage optimizer (Appendix B)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import GradientTransform, PyTree
+from repro.core.schedules import Schedule
+
+
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+    momentum: PyTree
+
+
+def sgd(learning_rate: Schedule, *, momentum: float = 0.9,
+        weight_decay: float = 0.0, nesterov: bool = False
+        ) -> GradientTransform:
+
+    def init(params):
+        return SgdState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(grads, state, params=None):
+        lr = learning_rate(state.step)
+
+        def per_leaf(g, w, m):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * w.astype(jnp.float32)
+            new_m = momentum * m + g32
+            step_dir = g32 + momentum * new_m if nesterov else new_m
+            return new_m, -lr * step_dir
+
+        out = jax.tree_util.tree_map(per_leaf, grads, params, state.momentum)
+        is_pair = lambda x: isinstance(x, tuple)
+        new_m = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
+        updates = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_pair)
+        return updates, SgdState(step=state.step + 1, momentum=new_m)
+
+    return GradientTransform(init, update)

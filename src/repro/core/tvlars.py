@@ -1,0 +1,109 @@
+"""TVLARS — Time-Varying LARS (the paper's contribution, Algorithm 1).
+
+Replaces warm-up with the configurable inverted-sigmoid base LR of
+Eq. (5):
+
+    φ_t  = 1/(α + exp(λ(t − d_e))) + γ_min
+    γ_t^k = γ_target · η · φ_t · ‖w^k‖ / (‖∇L(w^k)‖ + wd·‖w^k‖ + eps)
+
+so the run *starts* at (roughly) the target LR — "Initiating Exploration
+Excitation" — holds for ~d_e steps, then anneals smoothly to
+γ_target·γ_min, converging to plain-LARS behaviour ("Alignment with
+LARS").  Bounds (Eq. 6):  γ_min ≤ φ_t ≤ 1/(α+exp(−λ d_e)) (+γ_min).
+
+Momentum (Algorithm 1 lines 7–8, the paper's parameter-space heavy ball):
+
+    m_{t+1} = w_t − γ_t^k (g + wd·w)        # proposed params
+    w_{t+1} = m_{t+1} + μ (m_{t+1} − m_t)   # extrapolate along history
+
+``momentum_style="paper"`` implements exactly that (the momentum buffer
+stores the previous *proposed parameters*; m_0 := w_0 so step 0 is a
+plain scaled step). ``momentum_style="lars"`` uses the conventional
+LARS buffer (m ← μm + γ(g+wd·w); w ← w − m). Both are tested; see
+DESIGN.md §1 for the Algorithm-1 typo note.
+
+TVLARS uses NO external LR scheduler (Appendix B) — φ_t is the schedule.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import labels as labels_lib
+from repro.core.base import GradientTransform, PyTree, safe_norm
+from repro.core.lars import _trust_ratio
+from repro.core.schedules import tvlars_phi
+
+
+class TVLarsState(NamedTuple):
+    step: jnp.ndarray
+    momentum: PyTree   # previous proposed params (paper) or velocity (lars)
+
+
+def tvlars(gamma_target: float, *, lam: float = 1e-4,
+           delay_steps: int = 100, alpha: float = 1.0,
+           gamma_min: float = 1e-3, eta: float = 1e-3,
+           momentum: float = 0.9, weight_decay: float = 5e-4,
+           eps: float = 1e-9, momentum_style: str = "paper",
+           param_labels: Optional[PyTree] = None,
+           use_kernel: bool = False) -> GradientTransform:
+    """Build TVLARS. ``gamma_target`` is the target LR of Table 1;
+    ``gamma_min`` is typically (B/B_base)·1e-3 (§5.2.1)."""
+    if momentum_style not in ("paper", "lars"):
+        raise ValueError(f"unknown momentum_style {momentum_style!r}")
+    phi = tvlars_phi(lam, delay_steps, alpha, gamma_min)
+
+    def init(params):
+        if momentum_style == "paper":
+            # copy=True: f32->f32 astype would alias the param buffer and
+            # break donation (same buffer donated twice in train_step)
+            m0 = jax.tree_util.tree_map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True),
+                params)
+        else:
+            m0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return TVLarsState(step=jnp.zeros((), jnp.int32), momentum=m0)
+
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError("tvlars requires params")
+        lab = param_labels if param_labels is not None \
+            else labels_lib.default_labels(params)
+        base_lr = gamma_target * phi(state.step)
+
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+        def per_leaf(g, w, m, tag):
+            g32 = g.astype(jnp.float32)
+            w32 = w.astype(jnp.float32)
+            if tag == labels_lib.ADAPT:
+                if (use_kernel and momentum_style == "lars"
+                        and w.ndim >= 1 and w.size >= 8):
+                    new_m, delta = kops.lars_update(
+                        w32, g32, m, base_lr=base_lr, eta=eta,
+                        weight_decay=weight_decay, momentum_mu=momentum,
+                        eps=eps, nesterov=False)
+                    return new_m, delta
+                ratio = _trust_ratio(w32, g32, eta, weight_decay, eps)
+                scaled = base_lr * ratio * (g32 + weight_decay * w32)
+            else:
+                scaled = base_lr * g32
+            if momentum_style == "paper":
+                proposed = w32 - scaled                      # m_{t+1}
+                new_w = proposed + momentum * (proposed - m)  # Alg.1 l.8
+                return proposed, new_w - w32                 # buffer, delta
+            new_m = momentum * m + scaled
+            return new_m, -new_m
+
+        out = jax.tree_util.tree_map(per_leaf, grads, params,
+                                     state.momentum, lab)
+        is_pair = lambda x: isinstance(x, tuple)
+        new_m = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
+        updates = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_pair)
+        return updates, TVLarsState(step=state.step + 1, momentum=new_m)
+
+    return GradientTransform(init, update)

@@ -1,0 +1,44 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they run in
+``interpret=True`` mode — same kernel body, executed in Python — so all
+correctness tests exercise the real kernel logic. ``REPRO_FORCE_REF=1``
+falls back to the pure-jnp oracles (useful for bisecting kernel bugs).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.lars_update import lars_update_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _force_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def lars_update(w, g, m, *, base_lr, eta, weight_decay, momentum_mu,
+                eps: float = 1e-9, nesterov: bool = False):
+    """Fused LARS trust-ratio + momentum step -> (new_momentum, delta)."""
+    if _force_ref():
+        return ref.ref_lars_update(
+            w, g, m, base_lr=base_lr, eta=eta, weight_decay=weight_decay,
+            momentum_mu=momentum_mu, eps=eps, nesterov=nesterov)
+    return lars_update_pallas(
+        w, g, m, base_lr=base_lr, eta=eta, weight_decay=weight_decay,
+        momentum_mu=momentum_mu, eps=eps, nesterov=nesterov,
+        interpret=_interpret())
+
+
+def rmsnorm(x, weight, *, eps: float = 1e-6):
+    """Fused RMSNorm (gemma convention: scale = 1 + weight)."""
+    if _force_ref():
+        return ref.ref_rmsnorm(x, weight, eps=eps)
+    return rmsnorm_pallas(x, weight, eps=eps, interpret=_interpret())

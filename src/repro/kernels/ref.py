@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth).
+
+Each ``ref_*`` function implements exactly the math its kernel fuses;
+tests sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_lars_update(w: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, *,
+                    base_lr, eta: float, weight_decay: float,
+                    momentum_mu: float, eps: float = 1e-9,
+                    nesterov: bool = False):
+    """LARS trust-ratio + momentum + delta (matches core/lars.py ADAPT path).
+
+    Returns (new_momentum, delta) where new params = w + delta.
+    """
+    w32 = w.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    w_norm = jnp.sqrt(jnp.sum(jnp.square(w32)))
+    g_norm = jnp.sqrt(jnp.sum(jnp.square(g32)))
+    denom = g_norm + weight_decay * w_norm + eps
+    ratio = jnp.where((w_norm > 0.0) & (g_norm > 0.0),
+                      eta * w_norm / denom, 1.0)
+    scaled = base_lr * ratio * (g32 + weight_decay * w32)
+    new_m = momentum_mu * m + scaled
+    step_dir = scaled + momentum_mu * new_m if nesterov else new_m
+    return new_m, -step_dir
+
+
+def ref_rmsnorm(x: jnp.ndarray, weight: jnp.ndarray,
+                eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm: x / rms(x) * (1 + weight)   (gemma/llama convention)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 / jnp.sqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+The two lines above MUST run before any jax import: they fabricate 512
+host-platform placeholder devices so ``jax.make_mesh`` can build the
+production meshes. Nothing here allocates real tensors — all inputs are
+ShapeDtypeStructs and only ``.lower().compile()`` runs.
+
+Per combination this script:
+  * builds the jit'd step (train_step for train_4k, forward for
+    prefill_32k, serve_step for decode shapes) with the production
+    in_shardings,
+  * compiles it,
+  * prints + records ``memory_analysis()`` (proves it fits) and
+    ``cost_analysis()`` (FLOPs/bytes for §Roofline),
+  * parses per-device collective bytes from the post-SPMD HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), which feed the collective roofline term.
+
+Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh single
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh multi
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, get_config, input_specs,
+                           supports_shape)
+from repro.core import build_optimizer
+from repro.launch import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.serving.decode import make_serve_step
+from repro.training.train_state import TrainState
+from repro.training.trainer import make_train_step
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|"
+    r"collective-permute)\b")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device result-bytes of every collective in a post-SPMD HLO."""
+    stats = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        base = op.replace("-start", "")
+        stats[base]["count"] += 1
+        stats[base]["bytes"] += _shape_bytes(type_str)
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        out = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            if hasattr(ma, attr):
+                out[attr] = int(getattr(ma, attr))
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def build_lowerable(arch_id: str, shape_name: str, mesh, *,
+                    optimizer_name: str = "tvlars",
+                    seq_parallel: bool = True):
+    """Returns (fn_jitted, example_args_shapes) ready to .lower(*args)."""
+    cfg = get_config(arch_id)
+    model = get_model(cfg)
+    spec = INPUT_SHAPES[shape_name]
+    kind = spec["kind"]
+    b, s = spec["global_batch"], spec["seq_len"]
+    specs = input_specs(cfg, shape_name)
+    rng = jax.random.PRNGKey(0)
+
+    # activation anchors: batch over (pod, data) when it divides; residual
+    # sequence dim over "model" (sequence parallelism) for full-seq kinds.
+    from repro.models import layers as _layers
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    m_size = mesh.shape.get("model", 1)
+    seq_axis = ("model" if seq_parallel and kind != "decode" and m_size > 1
+                and s % m_size == 0 else None)
+    _layers.set_batch_sharding(dp if dp and b % dp_size == 0 else None,
+                               seq_axis, model_size=m_size, mesh=mesh)
+
+    if kind == "train":
+        opt = build_optimizer(optimizer_name, total_steps=10_000,
+                              learning_rate=10.0, batch_size=b * s // 2048,
+                              weight_decay=5e-4)
+        state_shapes = jax.eval_shape(
+            lambda: TrainState.create(model.init(rng), opt))
+        batch_shapes = {k: v for k, v in specs.items()}
+        state_sh = sharding.named(
+            mesh, sharding.state_pspecs(mesh, state_shapes, fsdp=True))
+        batch_sh = sharding.named(mesh,
+                                  sharding.batch_pspecs(mesh, batch_shapes))
+        step = make_train_step(model, opt)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+        return fn, (state_shapes, batch_shapes)
+
+    params_shapes = jax.eval_shape(model.init, rng)
+    params_sh = sharding.named(
+        mesh, sharding.state_pspecs(mesh, params_shapes, fsdp=False))
+
+    if kind == "prefill":
+        batch_shapes = {k: v for k, v in specs.items()}
+        batch_sh = sharding.named(mesh,
+                                  sharding.batch_pspecs(mesh, batch_shapes))
+
+        def forward(params, batch):
+            # serving prefill: the full pass exists to produce KV state;
+            # only the LAST position's logits are needed to kick off
+            # decode. Unembedding every position costs an extra
+            # [B, S, V] (e.g. 2.3 GiB/dev at 32k × 152k vocab) for
+            # logits nobody reads.
+            logits, _ = model.apply(params, batch)
+            return logits[:, -1:]
+
+        fn = jax.jit(forward, in_shardings=(params_sh, batch_sh))
+        return fn, (params_shapes, batch_shapes)
+
+    # decode: one token against a seq_len-deep cache
+    extra = specs.get("extra_embeds")
+    if extra is not None:
+        cache_shapes = jax.eval_shape(
+            lambda p, e: model.init_cache(p, b, s, e), params_shapes, extra)
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda p: model.init_cache(p, b, s, None), params_shapes)
+    cache_sh = sharding.named(mesh,
+                              sharding.cache_pspecs(mesh, cache_shapes))
+    tok_sh = sharding.named(mesh, sharding.batch_pspecs(
+        mesh, {"tokens": specs["tokens"]}))["tokens"]
+    pos_sh = sharding.named(mesh, {"pos": jax.sharding.PartitionSpec()}
+                            )["pos"]
+    serve = make_serve_step(model)
+    fn = jax.jit(serve, in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+                 donate_argnums=(1,))
+    return fn, (params_shapes, cache_shapes, specs["tokens"], specs["pos"])
+
+
+def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool,
+               optimizer_name: str = "tvlars", save_dir: Optional[str] =
+               "experiments/dryrun", verbose: bool = True,
+               seq_parallel: bool = True) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    ok, reason = supports_shape(get_config(arch_id), shape_name)
+    if not ok:
+        result = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                  "status": "skipped", "reason": reason}
+        _save(save_dir, result)
+        if verbose:
+            print(f"[skip] {arch_id} × {shape_name}: {reason}")
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        fn, args = build_lowerable(arch_id, shape_name, mesh,
+                                   optimizer_name=optimizer_name,
+                                   seq_parallel=seq_parallel)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = _memory_dict(compiled)
+        cost = _cost_dict(compiled)
+        hlo_text = compiled.as_text()
+        coll = parse_collectives(hlo_text)
+        from repro.launch import hlo_analysis
+        structural = hlo_analysis.analyze(hlo_text)
+        mem["cpu_upcast_f32_bytes"] = structural.pop("cpu_upcast_f32_bytes")
+        mem["cpu_upcast_f32_bytes_sites"] = structural.pop(
+            "cpu_upcast_f32_bytes_sites")
+        mem["tpu_adjusted_bytes_per_device"] = (
+            mem.get("total_bytes_per_device", 0)
+            - mem["cpu_upcast_f32_bytes"])
+        # lower bound: every upcast site removed, floored at args+outputs
+        mem["tpu_adjusted_lower_bytes_per_device"] = max(
+            mem.get("total_bytes_per_device", 0)
+            - mem["cpu_upcast_f32_bytes_sites"],
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            - mem.get("alias_size_in_bytes", 0))
+
+    result = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "optimizer": optimizer_name,
+        "num_devices": int(mesh.size),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem, "cost": cost, "collectives": coll,
+        "structural": structural,   # trip-count-weighted flops/bytes/colls
+    }
+    _save(save_dir, result)
+    if verbose:
+        gb = mem.get("total_bytes_per_device", 0) / 2**30
+        fl = cost.get("flops", 0)
+        cb = coll["total_bytes"] / 2**30
+        print(f"[ok]   {arch_id} × {shape_name} × {mesh_name}: "
+              f"{gb:.2f} GiB/dev, {fl:.3e} flops/dev, "
+              f"{cb:.3f} GiB collective/dev "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    return result
+
+
+def _save(save_dir: Optional[str], result: dict) -> None:
+    if not save_dir:
+        return
+    os.makedirs(save_dir, exist_ok=True)
+    fname = (f"{result['arch']}__{result['shape']}__{result['mesh']}"
+             ".json").replace("/", "_")
+    with open(os.path.join(save_dir, fname), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {tuple(INPUT_SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--optimizer", default="tvlars")
+    ap.add_argument("--save-dir", default="experiments/dryrun")
+    ap.add_argument("--keep-going", action="store_true",
+                    help="continue past failures (report at end)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if args.shape == "all" else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    dryrun_one(arch, shape, multi_pod=mp,
+                               optimizer_name=args.optimizer,
+                               save_dir=args.save_dir)
+                except Exception:
+                    failures.append((arch, shape, mp))
+                    print(f"[FAIL] {arch} × {shape} × "
+                          f"{'multi' if mp else 'single'}")
+                    traceback.print_exc()
+                    if not args.keep_going:
+                        raise
+    if failures:
+        print(f"\n{len(failures)} failures: {failures}")
+        raise SystemExit(1)
+    print("\nAll dry-runs passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Structural analysis of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE
+(measured: an 8-layer scan reports the same FLOPs as a 2-layer scan), so
+aggregate numbers are useless for scan-over-layers programs. This module
+re-derives execution-weighted quantities from the HLO text itself:
+
+  * computations are parsed into op lists,
+  * a call graph is built from ``calls= / body= / condition= /
+    to_apply= / branch_computations=`` references,
+  * while-loop trip counts are recovered from the loop condition's
+    ``compare(iv, constant(N))`` (scan bounds are static),
+  * dot FLOPs (2·|result|·|contraction|), per-op result bytes and
+    collective result bytes are accumulated through the weighted walk.
+
+Also quantifies the CPU-backend bf16->f32 dot-operand upcast buffers
+(``wrapped_convert`` fusions), which inflate memory_analysis() on this
+container but do not exist on TPU (native bf16 MXU) — reported
+separately so the memory table can show raw and TPU-adjusted numbers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+                "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\(")
+_REF_RES = (re.compile(r"calls=%?([\w.\-]+)"),
+            re.compile(r"body=%?([\w.\-]+)"),
+            re.compile(r"to_apply=%?([\w.\-]+)"))
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0          # dot/conv flops, local ops only
+        self.bytes = 0            # Σ result bytes, local ops only
+        self.collective_bytes = {c: 0 for c in COLLECTIVES}
+        self.collective_counts = {c: 0 for c in COLLECTIVES}
+        self.calls: list[tuple[str, float]] = []   # (callee, multiplier)
+        self.whiles: list[tuple[str, str]] = []    # (body, condition)
+        self.max_s32_const = 0
+
+
+_DOT_OPERANDS_RE = re.compile(r"dot\(\s*%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(line: str, result_type: str, symtab: dict) -> float:
+    """FLOPs of a dot: 2·|result|·|lhs contracting dims|. Operand types
+    are resolved through the computation-local symbol table (compiled
+    HLO references operands by name only)."""
+    res_dims = _shape_elems_dims(result_type)
+    m = _DOT_OPERANDS_RE.search(line)
+    if not m:
+        return 0.0
+    lhs_type = symtab.get(m.group(1), "")
+    lhs_dims = _shape_elems_dims(lhs_type)
+    mc = _LHS_C_RE.search(line)
+    contract = 1
+    if mc and mc.group(1):
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    res = 1
+    for d in res_dims:
+        res *= d
+    return 2.0 * res * contract
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                     r"((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))")
+
+
+_CONVERT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(f32\[[0-9,]*\])\S*\s+"
+    r"convert\(%?([\w.\-]+)\)")
+_UPCAST_MIN_BYTES = 64 * 2**20
+
+
+def parse_hlo(text: str, _upcast_acc: Optional[list] = None
+              ) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    symtab: dict[str, str] = {}
+    entry = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and line.rstrip().endswith("{"):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            symtab = {}
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            symtab[dm.group(1)] = dm.group(2)
+        if _upcast_acc is not None:
+            cm = _CONVERT_RE.match(line)
+            if cm:
+                # only buffer-allocating sites: fusion ROOTs and
+                # top-level ops (internal fused ops don't allocate)
+                is_fusion_comp = cur.name.startswith(("fused", "wrapped"))
+                allocates = (line.lstrip().startswith("ROOT")
+                             if is_fusion_comp else True)
+                n = shape_bytes(cm.group(1))
+                src_type = symtab.get(cm.group(2), "")
+                if (allocates and n >= _UPCAST_MIN_BYTES
+                        and src_type.startswith("bf16")
+                        and _shape_elems_dims(src_type)
+                        == _shape_elems_dims(cm.group(1))):
+                    # dedupe by shape: XLA reuses buffers across
+                    # non-overlapping live ranges, so counting every
+                    # allocation site overstates (went negative on
+                    # qwen2-72b); one buffer per distinct shape is the
+                    # conservative estimate.
+                    _upcast_acc.append((cm.group(1), n))
+        op_m = _OP_RE.match(line)
+        if op_m:
+            type_str, op = op_m.group(1), op_m.group(2)
+            # HBM-traffic model: only buffer-producing ops write memory —
+            # ops inside fused computations (except the fusion ROOT) are
+            # register/VMEM-resident, and bookkeeping ops alias.
+            is_fusion_comp = cur.name.startswith(("fused", "wrapped"))
+            writes = ((line.lstrip().startswith("ROOT")
+                       if is_fusion_comp else True)
+                      and op not in ("parameter", "get-tuple-element",
+                                     "tuple", "bitcast", "constant"))
+            if writes:
+                cur.bytes += shape_bytes(type_str)
+            if op == "dot":
+                cur.flops += _dot_flops(line, type_str, symtab)
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                cur.collective_bytes[base] += shape_bytes(type_str)
+                cur.collective_counts[base] += 1
+            if op == "while":
+                bm = _REF_RES[1].search(line)
+                cm = _COND_RE.search(line)
+                if bm and cm:
+                    cur.whiles.append((bm.group(1), cm.group(1)))
+                continue   # don't double-count via calls=
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                names = [n.strip().lstrip("%") for n in
+                         bm.group(1).split(",")]
+                for n in names:
+                    cur.calls.append((n, 1.0 / max(len(names), 1)))
+            else:
+                for rx in (_REF_RES[0], _REF_RES[2]):
+                    m = rx.search(line)
+                    if m:
+                        cur.calls.append((m.group(1), 1.0))
+        for cm in _CONST_RE.finditer(line):
+            cur.max_s32_const = max(cur.max_s32_const, int(cm.group(1)))
+    comps["__entry__"] = comps.get(entry) or next(iter(comps.values()))
+    return comps
+
+
+def weighted_totals(comps: dict[str, Computation]) -> dict:
+    """Walk the call graph from ENTRY, multiplying while bodies by their
+    trip counts; returns execution-weighted flops/bytes/collectives."""
+    entry = comps["__entry__"]
+    flops = 0.0
+    bytes_ = 0.0
+    coll_b = {c: 0.0 for c in COLLECTIVES}
+    coll_n = {c: 0.0 for c in COLLECTIVES}
+    seen_stack: set[str] = set()
+
+    def walk(comp: Computation, mult: float):
+        nonlocal flops, bytes_
+        if comp.name in seen_stack:   # defensive vs cycles
+            return
+        seen_stack.add(comp.name)
+        flops += comp.flops * mult
+        bytes_ += comp.bytes * mult
+        for c in COLLECTIVES:
+            coll_b[c] += comp.collective_bytes[c] * mult
+            coll_n[c] += comp.collective_counts[c] * mult
+        for callee, w in comp.calls:
+            if callee in comps:
+                walk(comps[callee], mult * w)
+        for body, cond in comp.whiles:
+            trips = 1
+            if cond in comps:
+                trips = max(comps[cond].max_s32_const, 1)
+            if body in comps:
+                walk(comps[body], mult * trips)
+        seen_stack.discard(comp.name)
+
+    walk(entry, 1.0)
+    total_cb = sum(coll_b.values())
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "collective_bytes": {c: coll_b[c] for c in COLLECTIVES},
+        "collective_counts": {c: coll_n[c] for c in COLLECTIVES},
+        "collective_total_bytes": total_cb,
+    }
+
+
+def analyze(text: str) -> dict:
+    """Execution-weighted totals + CPU bf16->f32 upcast-buffer bytes.
+
+    The upcast accounting sums every distinct ≥64 MiB f32 buffer that is
+    a same-shape convert of a bf16 value — the CPU backend's dot-operand
+    promotion (dominant ones are whole stacked weight/cache tensors kept
+    live across the layer loop). On TPU these buffers do not exist; the
+    memory table reports raw and adjusted columns.
+    """
+    upcasts: list = []
+    comps = parse_hlo(text, _upcast_acc=upcasts)
+    out = weighted_totals(comps)
+    by_shape: dict[str, int] = {}
+    for shape, n in upcasts:
+        by_shape[shape] = n
+    # True upcast memory needs buffer liveness; report both bounds:
+    # by-shape dedupe (lower bound — assumes same-shaped buffers reuse)
+    # and all allocation sites (upper bound — assumes all coexist).
+    out["cpu_upcast_f32_bytes"] = int(sum(by_shape.values()))
+    out["cpu_upcast_f32_bytes_sites"] = int(sum(n for _, n in upcasts))
+    return out

@@ -1,0 +1,30 @@
+"""Mesh construction.
+
+Production target: TPU v5e pods of 256 chips. Single-pod mesh is
+(16, 16) over ("data", "model"); multi-pod is (2, 16, 16) over
+("pod", "data", "model") — the batch shards over ("pod","data") jointly.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE any jax
+import to fabricate the placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def required_devices(*, multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256

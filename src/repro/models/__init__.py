@@ -1,0 +1,4 @@
+"""repro.models — pure-JAX model zoo (scan-over-layers, dict pytrees)."""
+from repro.models.registry import Model, extra_embed_shape, get_model
+
+__all__ = ["Model", "extra_embed_shape", "get_model"]

@@ -1,0 +1,142 @@
+"""Small ResNet-style CNN — the paper-faithful image-classification model.
+
+The paper trains ResNet18/34 on CIFAR-10 / Tiny-ImageNet. We keep the
+same family at CPU scale (3 stages of residual 3×3-conv blocks +
+GroupNorm) and reproduce the §5.2.3 ablation: selectable weight
+initialisation (xavier_uniform / xavier_normal / kaiming_uniform /
+kaiming_normal).
+
+GroupNorm replaces BatchNorm: under pjit the global batch is one logical
+tensor so SyncBN is trivially implied, but BN's running statistics are
+training-loop state the optimizer must skip; GroupNorm keeps the
+optimizer surface identical to the transformer zoo (1-D scale/bias
+leaves labelled PLAIN). This is an explicit adaptation (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+INITS = ("xavier_uniform", "xavier_normal", "kaiming_uniform",
+         "kaiming_normal")
+
+
+def _fans(shape) -> tuple[float, float]:
+    if len(shape) == 4:   # HWIO conv
+        rf = shape[0] * shape[1]
+        return shape[2] * rf, shape[3] * rf
+    return shape[0], shape[1]
+
+
+def make_initializer(method: str) -> Callable:
+    if method not in INITS:
+        raise ValueError(f"unknown init {method!r}; one of {INITS}")
+
+    def init(key, shape, dtype=jnp.float32):
+        fan_in, fan_out = _fans(shape)
+        if method == "xavier_uniform":
+            lim = math.sqrt(6.0 / (fan_in + fan_out))
+            return jax.random.uniform(key, shape, dtype, -lim, lim)
+        if method == "xavier_normal":
+            std = math.sqrt(2.0 / (fan_in + fan_out))
+            return jax.random.normal(key, shape, dtype) * std
+        if method == "kaiming_uniform":
+            lim = math.sqrt(6.0 / fan_in)
+            return jax.random.uniform(key, shape, dtype, -lim, lim)
+        std = math.sqrt(2.0 / fan_in)
+        return jax.random.normal(key, shape, dtype) * std
+
+    return init
+
+
+def _conv(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _groupnorm(p, x, groups: int = 8, eps: float = 1e-5):
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    x = xg.reshape(b, h, w, c)
+    return (x * p["scale"] + p["bias"]).astype(jnp.float32)
+
+
+def init_cnn(key, *, num_classes: int = 10, width: int = 32,
+             blocks_per_stage: int = 2, in_channels: int = 3,
+             init_method: str = "xavier_uniform") -> dict:
+    """3-stage residual CNN (a ResNet18-shaped scaled-down sibling)."""
+    wi = make_initializer(init_method)
+    keys = iter(jax.random.split(key, 64))
+    params: dict = {"stem": {"w": wi(next(keys), (3, 3, in_channels, width))},
+                    "stem_gn": {"scale": jnp.ones((width,)),
+                                "bias": jnp.zeros((width,))}}
+    c = width
+    for s in range(3):
+        c_out = width * (2 ** s)
+        stage = []
+        for b in range(blocks_per_stage):
+            blk = {
+                "w1": wi(next(keys), (3, 3, c if b == 0 else c_out, c_out)),
+                "gn1": {"scale": jnp.ones((c_out,)),
+                        "bias": jnp.zeros((c_out,))},
+                "w2": wi(next(keys), (3, 3, c_out, c_out)),
+                "gn2": {"scale": jnp.ones((c_out,)),
+                        "bias": jnp.zeros((c_out,))},
+            }
+            if b == 0 and c != c_out:
+                blk["proj"] = wi(next(keys), (1, 1, c, c_out))
+            stage.append(blk)
+        params[f"stage{s}"] = stage
+        c = c_out
+    params["head"] = {"w": wi(next(keys), (c, num_classes)),
+                      "b": jnp.zeros((num_classes,))}
+    return params
+
+
+def apply_cnn(params: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """images: [B, H, W, C] -> logits [B, num_classes]."""
+    x = _conv(images, params["stem"]["w"])
+    x = jax.nn.relu(_groupnorm(params["stem_gn"], x))
+    for s in range(3):
+        for b, blk in enumerate(params[f"stage{s}"]):
+            stride = 2 if (s > 0 and b == 0) else 1
+            res = x
+            if "proj" in blk:
+                res = _conv(x, blk["proj"], stride)
+            elif stride != 1:
+                res = x[:, ::stride, ::stride]
+            y = jax.nn.relu(_groupnorm(blk["gn1"], _conv(x, blk["w1"],
+                                                         stride)))
+            y = _groupnorm(blk["gn2"], _conv(y, blk["w2"]))
+            x = jax.nn.relu(y + res)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def init_mlp_classifier(key, *, in_dim: int, num_classes: int,
+                        hidden: int = 256, depth: int = 3,
+                        init_method: str = "xavier_uniform") -> dict:
+    wi = make_initializer(init_method)
+    keys = jax.random.split(key, depth + 1)
+    dims = [in_dim] + [hidden] * (depth - 1) + [num_classes]
+    return {f"fc{i}": {"w": wi(keys[i], (dims[i], dims[i + 1])),
+                       "b": jnp.zeros((dims[i + 1],))}
+            for i in range(depth)}
+
+
+def apply_mlp_classifier(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    x = x.reshape(x.shape[0], -1)
+    n = len(params)
+    for i in range(n):
+        p = params[f"fc{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts layer — top-k capacity routing, expert-parallel.
+
+Routing is GShard/Switch-style with a fixed per-expert capacity
+C = ceil(T·k/E · capacity_factor): tokens above capacity are dropped
+(their expert contribution is zero; the residual stream carries them).
+
+TPU adaptation: instead of the GShard one-hot dispatch einsum (whose
+[T, E, C] one-hot does not fit at T≈1M tokens), dispatch/combine use
+flat scatter-add / gather on an [E·C, d] buffer. Expert weights are
+stacked on a leading expert axis and sharded over the ``model`` mesh
+axis (expert parallelism); the scatter from data-sharded tokens to
+expert-sharded slots is the layer's all-to-all (visible in the HLO and
+counted by the roofline harness).
+
+Aux losses: standard load-balance loss (mean_prob · mean_assign · E)
+and router z-loss, returned for the trainer to add.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jnp.ndarray
+    router_z_loss: jnp.ndarray
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    out_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    return {
+        "router": L.normal_init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "wi": L.normal_init(ks[1], (e, d, f), cfg.pdtype),
+        "wg": L.normal_init(ks[2], (e, d, f), cfg.pdtype),
+        "wo": L.normal_init(ks[3], (e, f, d), cfg.pdtype, out_scale),
+    }
+
+
+def moe_capacity(group_tokens: int, cfg: ModelConfig) -> int:
+    """Per-expert capacity within one routing group (= one batch row).
+
+    Full sequences pad capacity to a multiple of 8 (TPU tile alignment);
+    decode (1 token/group) uses the exact capacity — the 8-slot floor
+    made each expert buffer 8× larger than needed per decode step
+    (measured 17.0 -> 8.6 GiB/dev on qwen3-moe decode_32k)."""
+    c = math.ceil(group_tokens * cfg.experts_per_token / cfg.num_experts
+                  * cfg.capacity_factor)
+    if group_tokens == 1:
+        return max(1, c)
+    return max(8, -(-c // 8) * 8)  # pad to 8 for TPU-friendly shapes
+
+
+def moe_apply(params: dict, cfg: ModelConfig, x: jnp.ndarray
+              ) -> tuple[jnp.ndarray, MoEAux]:
+    """x: [B, S, d] -> (out [B, S, d], aux losses).
+
+    GShard-style *group-wise* routing: each batch row is a routing group
+    with its own capacity C = ceil(S·k/E·cf). The position-in-expert
+    cumsum then runs over a LOCAL (unsharded) dim — a global cumsum over
+    the data-sharded token dim forces GSPMD to all-gather the [T·k, E]
+    assignment tensor (measured +8 GiB/dev on qwen3-moe train_4k).
+    Dispatch/combine are flat scatter-add/gathers into an
+    [E, B·C, d] buffer whose expert dim shards over ``model`` (EP) and
+    token dim over the data axes — the scatter is the all-to-all.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = moe_capacity(s, cfg)
+
+    logits = (x.astype(jnp.float32) @ params["router"])        # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, k)             # [B, S, k]
+    topk_probs = topk_probs / (jnp.sum(topk_probs, -1, keepdims=True) + 1e-9)
+
+    # per-group position of each (token, k) inside its expert's capacity
+    assign = jax.nn.one_hot(topk_idx, e, dtype=jnp.int32)      # [B, S, k, E]
+    fa = assign.reshape(b, s * k, e)
+    pos = jnp.sum((jnp.cumsum(fa, axis=1) - fa) * fa, axis=-1)  # [B, S*k]
+    expert_of = topk_idx.reshape(b, s * k)
+    keep = pos < cap
+    slot = expert_of * cap + jnp.where(keep, pos, 0)           # [B, S*k]
+
+    # dispatch: per-group scatter into [B, E*C, d]
+    src = jnp.repeat(x, k, axis=1)                             # [B, S*k, d]
+    src = jnp.where(keep[..., None], src, 0.0)
+    buf = jnp.zeros((b, e * cap, d), x.dtype)
+    buf = jax.vmap(lambda bu, sl, sr: bu.at[sl].add(sr))(buf, slot, src)
+    # [B, E, C, d] -> [E, B*C, d]: expert dim to the front (EP sharding)
+    buf = buf.reshape(b, e, cap, d).transpose(1, 0, 2, 3).reshape(
+        e, b * cap, d)
+
+    # expert FFN (stacked weights, expert-parallel)
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wi"].astype(buf.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wg"].astype(buf.dtype))
+    h = jax.nn.silu(g) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(buf.dtype))
+
+    # combine: per-group gather + weight
+    out_buf = out_buf.reshape(e, b, cap, d).transpose(1, 0, 2, 3).reshape(
+        b, e * cap, d)
+    gathered = jax.vmap(lambda ob, sl: ob[sl])(out_buf, slot)  # [B, S*k, d]
+    w = (topk_probs.reshape(b, s * k, 1) * keep[..., None]).astype(
+        gathered.dtype)
+    out = jnp.sum((gathered * w).reshape(b, s, k, d), axis=2)
+
+    # aux losses (global means)
+    me = jnp.mean(probs, axis=(0, 1))                          # [E]
+    ce = jnp.mean(jax.nn.one_hot(topk_idx[..., 0], e, dtype=jnp.float32),
+                  axis=(0, 1))
+    lb = e * jnp.sum(me * ce)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return out, MoEAux(lb, z)

@@ -1,0 +1,96 @@
+"""Model registry: family -> (init, apply, init_cache, decode_step).
+
+Unified functional API so the trainer / server / dry-run never branch on
+architecture:
+
+    model = get_model(cfg)
+    params = model.init(rng)
+    logits, aux = model.apply(params, batch)          # batch: dict
+    cache = model.init_cache(params, batch_size, max_len, extra)
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+
+``batch["tokens"]`` [B,S] always; ``batch["extra_embeds"]`` carries the
+stubbed modality frontend output (image patches for vlm, audio frames
+for encdec) when the family needs it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as E
+from repro.models import hybrid as H
+from repro.models import transformer as T
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    apply: Callable           # (params, batch) -> (logits, aux)
+    init_cache: Callable      # (params, batch, max_len, extra) -> cache
+    decode_step: Callable     # (params, cache, tokens, pos) -> (logits, cache)
+    loss: Callable            # (params, batch) -> (mean CE, aux) — fused
+                              # chunked CE head, never materialises logits
+
+
+def _needs_extra(cfg: ModelConfig) -> bool:
+    return cfg.family in ("vlm", "encdec")
+
+
+def extra_embed_shape(cfg: ModelConfig, batch: int) -> Optional[tuple]:
+    if cfg.family == "vlm":
+        return (batch, cfg.num_image_tokens, cfg.d_model)
+    if cfg.family == "encdec":
+        return (batch, cfg.encoder_seq, cfg.d_model)
+    return None
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        init_fn, apply_fn = T.init_lm, T.apply_lm
+        hidden_fn = T.apply_lm_hidden
+        cache_fn, decode_fn = T.init_lm_cache, T.decode_lm
+    elif cfg.family == "ssm":
+        init_fn, apply_fn = H.init_ssm_lm, H.apply_ssm_lm
+        hidden_fn = H.apply_ssm_lm_hidden
+        cache_fn, decode_fn = H.init_ssm_cache, H.decode_ssm_lm
+    elif cfg.family == "hybrid":
+        init_fn, apply_fn = H.init_hybrid_lm, H.apply_hybrid_lm
+        hidden_fn = H.apply_hybrid_lm_hidden
+        cache_fn, decode_fn = H.init_hybrid_cache, H.decode_hybrid_lm
+    elif cfg.family == "encdec":
+        init_fn, apply_fn = E.init_encdec, E.apply_encdec
+        hidden_fn = E.apply_encdec_hidden
+        cache_fn, decode_fn = E.init_encdec_cache, E.decode_encdec
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+
+    def init(rng):
+        return init_fn(cfg, rng)
+
+    def _extra(batch):
+        return batch.get("extra_embeds") if _needs_extra(cfg) else None
+
+    def apply(params, batch: dict):
+        return apply_fn(cfg, params, batch["tokens"], _extra(batch))
+
+    def loss(params, batch: dict):
+        from repro.training import losses
+        h, aux = hidden_fn(cfg, params, batch["tokens"], _extra(batch))
+        emb = params["embed"]
+        w = emb["table"].T if cfg.tie_embeddings else emb["head"]
+        ce = losses.fused_ce_from_hidden(h, w.astype(h.dtype),
+                                         batch["labels"])
+        return ce, aux
+
+    def init_cache(params, batch_size: int, max_len: int, extra=None):
+        return cache_fn(cfg, params, batch_size, max_len, extra)
+
+    def decode_step(params, cache, tokens, pos):
+        return decode_fn(cfg, params, cache, tokens, pos)
+
+    return Model(cfg, init, apply, init_cache, decode_step, loss)

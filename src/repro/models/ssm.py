@@ -1,0 +1,180 @@
+"""Mamba2 — State Space Duality (SSD) block (Dao & Gu, arXiv:2405.21060).
+
+Train/prefill uses the *chunked dual form*: sequence split into chunks of
+Q tokens; intra-chunk terms are attention-like batched matmuls (MXU
+friendly — this is the TPU-native choice vs. the CUDA selective-scan
+kernel), inter-chunk terms are a ``lax.scan`` over per-chunk states.
+Decode is the O(1)-state recurrence.
+
+All decays are ≤ 1 by construction (A < 0, dt > 0 via softplus), so the
+chunked exponentials are numerically safe in f32.
+
+Shapes: heads H = (expand·d)/head_dim, state N = cfg.ssm_state,
+head dim P = cfg.ssm_head_dim, single B/C group shared across heads.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray      # [B, H, P, N]
+    conv: jnp.ndarray       # [B, W-1, di + 2N]  (last conv inputs)
+
+
+def init_mamba(cfg: ModelConfig, key) -> dict:
+    d, di, n = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    h, w = cfg.ssm_num_heads, cfg.ssm_conv_width
+    ks = jax.random.split(key, 4)
+    out_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[2], (h,))
+    dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "in_proj": L.normal_init(ks[0], (d, 2 * di + 2 * n + h), cfg.pdtype),
+        "conv_w": L.normal_init(ks[1], (w, di + 2 * n), cfg.pdtype, 0.1),
+        "conv_b": jnp.zeros((di + 2 * n,), cfg.pdtype),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log) = -1
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": L.init_rmsnorm(di, cfg.pdtype),
+        "out_proj": L.normal_init(ks[3], (di, d), cfg.pdtype, out_scale),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv via tap shifts. x: [B,S,C], w: [W,C]."""
+    taps = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(taps):
+        shift = taps - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt  # dt: [..., h]
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk: int):
+    """Chunked SSD. xh: [B,S,H,P]; dt: [B,S,H]; a: [H] (negative);
+    bmat/cmat: [B,S,N]. Returns y: [B,S,H,P]."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    xc = xh.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+
+    da = dtc * a                                    # [b,nc,q,h]  (≤ 0)
+    cum = jnp.cumsum(da, axis=2)                    # [b,nc,q,h]
+    xdt = xc * dtc[..., None]                       # dt·x
+
+    # intra-chunk (attention-like): L[i,j] = exp(cum_i − cum_j), i ≥ j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [b,nc,i,j,h]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)         # [b,nc,i,j]
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                        scores, decay, xdt)
+
+    # per-chunk end states: S_c = Σ_j B_j ⊗ (exp(cum_last − cum_j)·dt_j·x_j)
+    dte = jnp.exp(cum[:, :, -1:, :] - cum) * dtc           # decay·dt [b,nc,q,h]
+    s_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, dte, xc)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [b,nc,h]
+
+    def step(state, inp):
+        cd, sc = inp                                       # [b,h], [b,h,p,n]
+        new = state * cd[:, :, None, None] + sc
+        return new, state                                  # emit state BEFORE
+
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)                 # [nc,b,h]
+    sc_t = jnp.moveaxis(s_c, 1, 0)                         # [nc,b,h,p,n]
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    _, s_in = jax.lax.scan(step, init, (cd_t, sc_t))
+    s_in = jnp.moveaxis(s_in, 0, 1)                        # [b,nc,h,p,n]
+
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, s_in, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(xh.dtype)
+
+
+def mamba_apply(params: dict, cfg: ModelConfig, x: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Full-sequence Mamba2 block. x: [B,S,d] -> [B,S,d]."""
+    di, n, h, p = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads,
+                   cfg.ssm_head_dim)
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    bsz, s = x.shape[0], x.shape[1]
+    xh = xin.reshape(bsz, s, h, p)
+    dt32 = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    y = _ssd_chunked(xh, dt32, a, bmat, cmat, cfg.ssm_chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, di)
+    y = y * jax.nn.silu(z)
+    y = L.rmsnorm(params["norm"], y, cfg.norm_eps)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    return SSMCache(
+        state=jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_head_dim, n),
+                        jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, di + 2 * n), dtype))
+
+
+def mamba_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 cache: SSMCache) -> tuple[jnp.ndarray, SSMCache]:
+    """One-token recurrent step. x: [B,1,d]."""
+    di, n, h, p = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads,
+                   cfg.ssm_head_dim)
+    bsz = x.shape[0]
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # conv over (cached W-1 inputs, current)
+    conv_in = jnp.concatenate([cache.conv, xbc], axis=1)     # [B, W, C]
+    w = params["conv_w"].astype(x.dtype)
+    out = jnp.einsum("bwc,wc->bc", conv_in, w) + params["conv_b"].astype(
+        x.dtype)
+    xbc1 = jax.nn.silu(out)[:, None, :]
+    new_conv = conv_in[:, 1:, :]
+
+    xin, bmat, cmat = jnp.split(xbc1, [di, di + n], axis=-1)
+    xh = xin.reshape(bsz, h, p).astype(jnp.float32)
+    bvec = bmat[:, 0].astype(jnp.float32)                    # [B, N]
+    cvec = cmat[:, 0].astype(jnp.float32)
+    dt32 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt32 * a)                                   # [B, H]
+    state = cache.state * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt32, xh, bvec)
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec) + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = L.rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, SSMCache(state=state, conv=new_conv)

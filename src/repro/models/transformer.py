@@ -1,0 +1,308 @@
+"""Decoder-only transformer LM — dense / MoE / gemma3-local:global / VLM.
+
+Layer stacks are built as *groups* scanned with ``jax.lax.scan`` over
+stacked parameters (HLO size independent of depth — a 80-layer 72B model
+traces one group). Group patterns:
+
+  dense / moe        group = 1 uniform layer,            G = num_layers
+  gemma3 (global_every=N, sliding_window=W)
+                     group = (N−1) local + 1 global,     G = L / N
+  vlm (cross_attn_every=N)
+                     group = N self + 1 gated cross,     G = L / N
+                     (cross blocks are the *extra* adapter layers of
+                      Llama-3.2-Vision; "40L" = 40 self-attn layers)
+
+Each layer is pre-norm: h += attn(norm(h)); h += mlp|moe(norm(h)).
+MoE aux losses are accumulated through the scan carry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+class LMAux(NamedTuple):
+    load_balance_loss: jnp.ndarray
+    router_z_loss: jnp.ndarray
+
+
+ZERO_AUX = LMAux(jnp.zeros(()), jnp.zeros(()))
+
+
+# --------------------------------------------------------------------------
+# single layers
+# --------------------------------------------------------------------------
+
+def init_layer(cfg: ModelConfig, key, kind: str = "attn") -> dict:
+    """kind: attn | local | cross — all attn+ffn blocks."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": L.init_norm(cfg, cfg.d_model),
+         "attn": L.init_attention(cfg, k1),
+         "norm2": L.init_norm(cfg, cfg.d_model)}
+    if cfg.num_experts and kind != "cross":
+        p["moe"] = M.init_moe(cfg, k2)
+    else:
+        p["mlp"] = L.init_mlp(cfg, k2)
+    if kind == "cross":
+        p["gate"] = jnp.zeros((), jnp.float32)   # tanh-gated (starts closed)
+    del k3
+    return p
+
+
+def layer_apply(params: dict, cfg: ModelConfig, h: jnp.ndarray,
+                positions: jnp.ndarray, mask, kind: str = "attn",
+                kv_src: Optional[jnp.ndarray] = None
+                ) -> tuple[jnp.ndarray, LMAux]:
+    a = L.attention(params["attn"], cfg, L.norm(cfg, params["norm1"], h),
+                    positions, mask, kv_src=kv_src,
+                    use_rope=(kind != "cross"))
+    if kind == "cross":
+        a = jnp.tanh(params["gate"]).astype(a.dtype) * a
+    h = h + a
+    x = L.norm(cfg, params["norm2"], h)
+    if "moe" in params:
+        y, aux = M.moe_apply(params["moe"], cfg, x)
+        return h + y, LMAux(aux.load_balance_loss, aux.router_z_loss)
+    return h + L.mlp(params["mlp"], cfg, x), ZERO_AUX
+
+
+def layer_decode(params: dict, cfg: ModelConfig, h: jnp.ndarray,
+                 k_cache, v_cache, pos, *, window=None,
+                 cross_kv=None, kind: str = "attn"):
+    """One-token layer step; for kind=='cross' attends to cross_kv=(k,v)."""
+    x = L.norm(cfg, params["norm1"], h)
+    if kind == "cross":
+        ck, cv = cross_kv
+        q = jnp.einsum("bsd,dhk->bshk", x, params["attn"]["wq"].astype(
+            x.dtype))
+        if cfg.qkv_bias:
+            q = q + params["attn"]["bq"].astype(x.dtype)
+        out = L.gqa_scores_apply(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                 None)
+        a = jnp.einsum("bshk,hkd->bsd", out,
+                       params["attn"]["wo"].astype(x.dtype))
+        a = jnp.tanh(params["gate"]).astype(a.dtype) * a
+        new_k, new_v = k_cache, v_cache
+    else:
+        a, new_k, new_v = L.attention_decode(
+            params["attn"], cfg, x, k_cache, v_cache, pos, window=window)
+    h = h + a
+    x = L.norm(cfg, params["norm2"], h)
+    if "moe" in params:
+        y, _ = M.moe_apply(params["moe"], cfg, x)
+        h = h + y
+    else:
+        h = h + L.mlp(params["mlp"], cfg, x)
+    return h, new_k, new_v
+
+
+def cross_kv_from_embeds(params: dict, cfg: ModelConfig,
+                         embeds: jnp.ndarray):
+    """Precompute cross-attention K/V from (image/encoder) embeddings."""
+    k = jnp.einsum("btd,dhk->bthk", embeds,
+                   params["attn"]["wk"].astype(embeds.dtype))
+    v = jnp.einsum("btd,dhk->bthk", embeds,
+                   params["attn"]["wv"].astype(embeds.dtype))
+    if cfg.qkv_bias:
+        k = k + params["attn"]["bk"].astype(embeds.dtype)
+        v = v + params["attn"]["bv"].astype(embeds.dtype)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# group structure
+# --------------------------------------------------------------------------
+
+def _group_spec(cfg: ModelConfig) -> tuple[int, list[str]]:
+    """Returns (num_groups, [kind per layer-in-group])."""
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        n = cfg.cross_attn_every
+        assert cfg.num_layers % n == 0
+        return cfg.num_layers // n, ["attn"] * n + ["cross"]
+    if cfg.global_every and cfg.sliding_window:
+        n = cfg.global_every
+        assert cfg.num_layers % n == 0
+        return cfg.num_layers // n, ["local"] * (n - 1) + ["attn"]
+    return cfg.num_layers, ["attn"]
+
+
+def _stack_init(fn, key, count: int):
+    return jax.vmap(fn)(jax.random.split(key, count))
+
+
+def _sqrt_factor(n: int) -> int:
+    """Largest divisor of n that is <= sqrt(n)."""
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            best = d
+        d += 1
+    return best
+
+
+def scan_layers(body, carry, stacked, remat: bool):
+    """scan with sqrt(L) checkpointing.
+
+    A flat remat scan saves the carry at EVERY step: [L, B, S, D] — and
+    on the CPU/XLA backend the backward loop's convert(h)->f32 gets
+    hoisted into a second full f32 stack (qwen2-72b train_4k: 5 + 10
+    GiB/dev for 80 layers). Factoring L = outer × inner and
+    checkpointing both levels saves only ``outer`` carries and
+    recomputes inner segments on the fly — the standard sqrt-remat
+    trade (one extra forward per inner segment).
+    """
+    leaves = jax.tree_util.tree_leaves(stacked)
+    n = leaves[0].shape[0]
+    inner = _sqrt_factor(n) if remat else 1
+    if not remat or inner <= 1:
+        b = jax.checkpoint(body) if remat else body
+        carry, _ = jax.lax.scan(b, carry, stacked)
+        return carry
+    outer = n // inner
+    stacked2 = jax.tree_util.tree_map(
+        lambda x: x.reshape((outer, inner) + x.shape[1:]), stacked)
+    inner_body = jax.checkpoint(body)
+
+    def outer_body(c, xs):
+        c, _ = jax.lax.scan(inner_body, c, xs)
+        return c, None
+
+    carry, _ = jax.lax.scan(jax.checkpoint(outer_body), carry, stacked2)
+    return carry
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    groups, kinds = _group_spec(cfg)
+    k_emb, k_layers, k_norm = jax.random.split(key, 3)
+    layer_params = {}
+    lkeys = jax.random.split(k_layers, len(kinds))
+    for i, kind in enumerate(kinds):
+        layer_params[f"l{i}_{kind}"] = _stack_init(
+            lambda k, kind=kind: init_layer(cfg, k, kind), lkeys[i], groups)
+    return {
+        "embed": L.init_embedding(cfg, k_emb),
+        "groups": layer_params,
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def _group_apply(cfg: ModelConfig, kinds, group_params, h, positions,
+                 masks, kv_src, aux: LMAux):
+    # nested remat: each layer is checkpointed individually so the
+    # backward of a multi-layer group (gemma3: 6 layers, vlm: 6) holds
+    # ONE layer's intermediates, not the whole group's (measured
+    # 40.9 -> 14.9 GiB/dev on gemma3 train_4k).
+    nested = cfg.remat and len(kinds) > 1
+    for i, kind in enumerate(kinds):
+        p = group_params[f"l{i}_{kind}"]
+        mask = masks["local"] if kind == "local" else masks["global"]
+        src = kv_src if kind == "cross" else None
+
+        def call(p_, h_, kind=kind, mask=mask, src=src):
+            return layer_apply(p_, cfg, h_, positions,
+                               None if kind == "cross" else mask, kind, src)
+
+        h, a = (jax.checkpoint(call) if nested else call)(p, h)
+        aux = LMAux(aux.load_balance_loss + a.load_balance_loss,
+                    aux.router_z_loss + a.router_z_loss)
+    return h, aux
+
+
+def apply_lm_hidden(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+                    extra_embeds: Optional[jnp.ndarray] = None
+                    ) -> tuple[jnp.ndarray, LMAux]:
+    """Backbone forward up to the final norm (no unembed)."""
+    groups, kinds = _group_spec(cfg)
+    b, s = tokens.shape
+    h = L.embed(params["embed"], cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    masks = {"global": ("causal", None),
+             "local": ("causal", cfg.sliding_window)
+             if cfg.sliding_window else None}
+    kv_src = extra_embeds.astype(h.dtype) if extra_embeds is not None else None
+
+    def body(carry, group_params):
+        h, aux = carry
+        h, aux = _group_apply(cfg, kinds, group_params, h, positions,
+                              masks, kv_src, aux)
+        return (h, aux), None
+
+    h, aux = scan_layers(body, (h, ZERO_AUX), params["groups"], cfg.remat)
+    return L.norm(cfg, params["final_norm"], h), aux
+
+
+def apply_lm(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+             extra_embeds: Optional[jnp.ndarray] = None
+             ) -> tuple[jnp.ndarray, LMAux]:
+    """Full-sequence forward. tokens: [B,S] -> logits [B,S,V]."""
+    h, aux = apply_lm_hidden(cfg, params, tokens, extra_embeds)
+    return L.unembed(params["embed"], cfg, h), aux
+
+
+# --------------------------------------------------------------------------
+# decode (KV cache)
+# --------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ModelConfig, params: dict, batch: int, max_len: int,
+                  extra_embeds: Optional[jnp.ndarray] = None) -> dict:
+    groups, kinds = _group_spec(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+    dt = cfg.cdtype
+    cache: dict[str, Any] = {}
+    for i, kind in enumerate(kinds):
+        name = f"l{i}_{kind}"
+        if kind == "cross":
+            assert extra_embeds is not None, "vlm cache needs image embeds"
+            k, v = jax.vmap(
+                lambda p: cross_kv_from_embeds(p, cfg,
+                                               extra_embeds.astype(dt))
+            )(params["groups"][name])
+            cache[name] = {"ck": k, "cv": v}
+        else:
+            t = (min(cfg.sliding_window, max_len)
+                 if kind == "local" and cfg.sliding_window else max_len)
+            cache[name] = {
+                "k": jnp.zeros((groups, batch, t, hkv, hd), dt),
+                "v": jnp.zeros((groups, batch, t, hkv, hd), dt)}
+    return cache
+
+
+def decode_lm(cfg: ModelConfig, params: dict, cache: dict,
+              tokens: jnp.ndarray, pos: jnp.ndarray
+              ) -> tuple[jnp.ndarray, dict]:
+    """One-token step. tokens: [B,1]; pos: scalar int32 (tokens cached so
+    far). Returns (logits [B,1,V], new cache)."""
+    groups, kinds = _group_spec(cfg)
+    h = L.embed(params["embed"], cfg, tokens)
+
+    def body(h, xs):
+        group_params, group_cache = xs
+        new_cache = {}
+        for i, kind in enumerate(kinds):
+            name = f"l{i}_{kind}"
+            p = group_params[name]
+            c = group_cache[name]
+            if kind == "cross":
+                h, _, _ = layer_decode(p, cfg, h, None, None, pos,
+                                       cross_kv=(c["ck"], c["cv"]),
+                                       kind=kind)
+                new_cache[name] = c
+            else:
+                window = cfg.sliding_window if kind == "local" else None
+                h, nk, nv = layer_decode(p, cfg, h, c["k"], c["v"], pos,
+                                         window=window, kind=kind)
+                new_cache[name] = {"k": nk, "v": nv}
+        return h, new_cache
+
+    h, new_cache = jax.lax.scan(body, h, (params["groups"], cache))
+    h = L.norm(cfg, params["final_norm"], h)
+    logits = L.unembed(params["embed"], cfg, h)
+    return logits, new_cache

@@ -1,0 +1,64 @@
+"""Serving: batched prefill + autoregressive decode with KV caches.
+
+``make_serve_step`` builds the ONE-token step the decode input shapes
+(decode_32k / long_500k) lower: new token + seq_len-deep cache.
+``generate`` is the host loop used by the serving example and tests
+(greedy or temperature sampling).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+def make_serve_step(model: Model) -> Callable:
+    """(params, cache, tokens [B,1], pos) -> (next_tokens [B,1], cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        next_tokens = jnp.argmax(logits[:, -1:], axis=-1)
+        return next_tokens.astype(jnp.int32), cache
+
+    return serve_step
+
+
+def prefill(model: Model, params, tokens: jnp.ndarray, max_len: int,
+            extra_embeds=None):
+    """Fill the cache by streaming the prompt token-by-token (reference
+    implementation; production prefill uses model.apply + cache dump,
+    which is what prefill_32k lowers)."""
+    b, s = tokens.shape
+    cache = model.init_cache(params, b, max_len, extra_embeds)
+    last = None
+    for t in range(s):
+        last, cache = model.decode_step(params, cache, tokens[:, t:t + 1],
+                                        jnp.int32(t))
+    return last, cache
+
+
+def generate(model: Model, params, prompt: jnp.ndarray, *,
+             num_tokens: int, max_len: Optional[int] = None,
+             extra_embeds=None, temperature: float = 0.0,
+             rng: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Greedy/temperature generation. prompt: [B, S] -> [B, num_tokens]."""
+    b, s = prompt.shape
+    max_len = max_len or (s + num_tokens)
+    logits, cache = prefill(model, params, prompt, max_len, extra_embeds)
+    step = jax.jit(model.decode_step)
+    out = []
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    for i in range(num_tokens):
+        out.append(tok)
+        logits, cache = step(params, cache, tok, jnp.int32(s + i))
+        lg = logits[:, -1]
+        if temperature > 0 and rng is not None:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, lg / temperature)[:, None]
+            tok = tok.astype(jnp.int32)
+        else:
+            tok = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

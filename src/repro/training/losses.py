@@ -1,0 +1,87 @@
+"""Losses: cross-entropy (CLF/LM) and Barlow Twins (SSL, Zbontar 2021).
+
+The problem statement Eq. (1) is CE + (λ/2)‖w‖²; weight decay is applied
+inside the optimizers (Eq. 2's wd term), so losses here are pure data
+terms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits [..., C], labels [...] int -> scalar mean CE (f32).
+
+    The gold logit is selected with an iota==label mask rather than
+    ``take_along_axis``: a gather along a sharded vocab dim makes GSPMD
+    replicate the (huge) logits over the data axes, while the masked
+    reduction stays sharded exactly like the logits (measured 13×
+    memory difference on train_4k).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels
+                     ).astype(jnp.float32))
+
+
+CE_CHUNK = 256
+
+
+def fused_ce_from_hidden(h: jnp.ndarray, unembed_w: jnp.ndarray,
+                         labels: jnp.ndarray) -> jnp.ndarray:
+    """Chunked softmax cross-entropy fused with the unembed projection.
+
+    Materialising [B, S, V] logits (plus their f32 CE copies and the f32
+    head gradient) dominated train-step memory (~12 GiB/dev on
+    qwen2-72b). Scanning over sequence chunks with a checkpointed body
+    keeps one [B, CE_CHUNK, V] logits block live; the backward
+    recomputes each block and accumulates the head gradient chunk-wise.
+
+    h: [B, S, D]; unembed_w: [D, V]; labels: [B, S] -> scalar mean CE.
+    """
+    b, s, d = h.shape
+    chunk = CE_CHUNK if s % CE_CHUNK == 0 else s
+    nblk = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, nblk, chunk, d), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(b, nblk, chunk), 1, 0)
+
+    @jax.checkpoint
+    def chunk_ce(h_blk, y_blk):
+        logits = (h_blk @ unembed_w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = y_blk[..., None] == jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        return jnp.sum(logz - gold)
+
+    def body(acc, xs):
+        h_blk, y_blk = xs
+        return acc + chunk_ce(h_blk, y_blk), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, yc))
+    return total / (b * s)
+
+
+def barlow_twins_loss(z1: jnp.ndarray, z2: jnp.ndarray,
+                      lambda_offdiag: float = 5e-3) -> jnp.ndarray:
+    """Redundancy-reduction loss on two embedding views [B, D].
+
+    C = (z1_norm^T z2_norm)/B;  loss = Σ_i (1−C_ii)² + λ Σ_{i≠j} C_ij².
+    """
+    z1 = z1.astype(jnp.float32)
+    z2 = z2.astype(jnp.float32)
+    b = z1.shape[0]
+    z1 = (z1 - z1.mean(0)) / (z1.std(0) + 1e-5)
+    z2 = (z2 - z2.mean(0)) / (z2.std(0) + 1e-5)
+    c = (z1.T @ z2) / b
+    on = jnp.sum(jnp.square(1.0 - jnp.diag(c)))
+    off = jnp.sum(jnp.square(c)) - jnp.sum(jnp.square(jnp.diag(c)))
+    return on + lambda_offdiag * off

@@ -1,0 +1,24 @@
+"""TrainState — params + optimizer state + step, as a pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import GradientTransform
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+
+    @classmethod
+    def create(cls, params, optimizer: GradientTransform) -> "TrainState":
+        return cls(step=jnp.zeros((), jnp.int32), params=params,
+                   opt_state=optimizer.init(params))
+
+
+def param_count(state: TrainState) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(state.params))

@@ -1,0 +1,131 @@
+"""Training-step factories + host-side fit loop.
+
+``make_train_step(model, optimizer)`` returns the pure function
+``(state, batch) -> (state, metrics)`` used everywhere: jit'd directly
+for CPU experiments, or pjit'd with shardings by the launcher — the
+function body is identical (GSPMD handles distribution).
+
+Metrics include mean LWN/LGN/LNR so the paper's Fig. 2 telemetry is free
+at every step; ``fit`` optionally records the full per-layer traces.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import apply_updates, instrumentation
+from repro.core.base import GradientTransform
+from repro.models.registry import Model
+from repro.training import losses
+from repro.training.train_state import TrainState
+
+
+def make_train_step(model: Model, optimizer: GradientTransform, *,
+                    lb_coef: float = 1e-2, z_coef: float = 1e-3,
+                    record_norms: bool = False) -> Callable:
+    """LM training step: CE over next-token labels + MoE aux losses."""
+
+    def loss_fn(params, batch):
+        # fused chunked CE head — full [B,S,V] logits never materialise
+        ce, aux = model.loss(params, batch)
+        loss = ce + lb_coef * aux.load_balance_loss \
+            + z_coef * aux.router_z_loss
+        return loss, (ce, aux)
+
+    def train_step(state: TrainState, batch: dict):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "ce": ce,
+                   "load_balance": aux.load_balance_loss,
+                   "grad_norm": _global_norm(grads)}
+        if record_norms:
+            metrics["layer_norms"] = instrumentation.layer_norms(
+                state.params, grads)
+        return TrainState(state.step + 1, params, opt_state), metrics
+
+    return train_step
+
+
+def make_classifier_step(apply_fn: Callable,
+                         optimizer: GradientTransform, *,
+                         record_norms: bool = False) -> Callable:
+    """Image-classifier step (paper-faithful CIFAR-analogue runs)."""
+
+    def loss_fn(params, images, labels):
+        logits = apply_fn(params, images)
+        return losses.cross_entropy(logits, labels), logits
+
+    def train_step(state: TrainState, images, labels):
+        (loss, logits), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, images, labels)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss,
+                   "accuracy": losses.accuracy(logits, labels),
+                   "grad_norm": _global_norm(grads)}
+        if record_norms:
+            metrics["layer_norms"] = instrumentation.layer_norms(
+                state.params, grads)
+        return TrainState(state.step + 1, params, opt_state), metrics
+
+    return train_step
+
+
+def make_ssl_step(embed_fn: Callable, optimizer: GradientTransform, *,
+                  lambda_offdiag: float = 5e-3,
+                  record_norms: bool = False) -> Callable:
+    """Barlow-Twins step: embed_fn(params, images) -> projections [B,D]."""
+
+    def loss_fn(params, v1, v2):
+        z1 = embed_fn(params, v1)
+        z2 = embed_fn(params, v2)
+        return losses.barlow_twins_loss(z1, z2, lambda_offdiag)
+
+    def train_step(state: TrainState, v1, v2):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, v1, v2)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "grad_norm": _global_norm(grads)}
+        if record_norms:
+            metrics["layer_norms"] = instrumentation.layer_norms(
+                state.params, grads)
+        return TrainState(state.step + 1, params, opt_state), metrics
+
+    return train_step
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
+        *, recorder: Optional[instrumentation.NormRecorder] = None,
+        log_every: int = 0, log_fn: Callable = print
+        ) -> tuple[TrainState, list[dict]]:
+    """Host loop used by CPU-scale experiments. ``batches`` yields either
+    dict batches (LM) or tuples (classifier/SSL args)."""
+    step_fn = jax.jit(train_step)
+    history: list[dict] = []
+    for i in range(num_steps):
+        batch = next(batches)
+        if isinstance(batch, dict):
+            state, metrics = step_fn(state, batch)
+        else:
+            state, metrics = step_fn(state, *batch)
+        ln = metrics.pop("layer_norms", None)
+        if recorder is not None and ln is not None:
+            recorder.record(i, ln)
+        host = {k: float(v) for k, v in metrics.items()}
+        history.append(host)
+        if log_every and (i % log_every == 0 or i == num_steps - 1):
+            log_fn(f"step {i:5d} " + " ".join(
+                f"{k}={v:.4f}" for k, v in host.items()))
+    return state, history

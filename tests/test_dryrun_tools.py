@@ -1,0 +1,92 @@
+"""Dry-run tooling units: HLO collective parsing, shape-byte accounting,
+input specs, long-context skip policy."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, LONG_CONTEXT_SKIP,
+                           get_config, input_specs, supports_shape)
+from repro.launch.dryrun import _shape_bytes, parse_collectives
+
+HLO = """
+ENTRY %main {
+  %ag = f32[16,128]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar = bf16[8,8]{1,0} all-reduce(%y), to_apply=%add
+  %ars = f32[4,4]{1,0} all-reduce-start(%z)
+  %rs = f32[2,64]{1,0} reduce-scatter(%w), dimensions={0}
+  %a2a = s32[16]{0} all-to-all(%v)
+  %cp = (f32[8]{0}, f32[8]{0}) collective-permute-start(%u)
+  %notacoll = f32[999,999]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]") == 16 * 128 * 4
+    assert _shape_bytes("bf16[8,8]") == 128
+    assert _shape_bytes("(f32[8], f32[8])") == 64
+    assert _shape_bytes("pred[3]") == 3
+    assert _shape_bytes("token[]") == 0
+
+
+def test_parse_collectives():
+    stats = parse_collectives(HLO)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["bytes"] == 16 * 128 * 4
+    assert stats["all-reduce"]["count"] == 2      # incl. -start
+    assert stats["reduce-scatter"]["bytes"] == 2 * 64 * 4
+    assert stats["all-to-all"]["count"] == 1
+    assert stats["collective-permute"]["count"] == 1
+    assert stats["collective-permute"]["bytes"] == 64
+    assert stats["total_bytes"] > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_input_specs_cover_all_pairs(arch_id, shape_name):
+    cfg = get_config(arch_id)
+    specs = input_specs(cfg, shape_name)
+    spec = INPUT_SHAPES[shape_name]
+    b = spec["global_batch"]
+    if spec["kind"] == "decode":
+        assert specs["tokens"].shape == (b, 1)
+        assert specs["pos"].shape == ()
+    else:
+        assert specs["tokens"].shape == (b, spec["seq_len"])
+    if cfg.family == "vlm":
+        assert specs["extra_embeds"].shape == (b, cfg.num_image_tokens,
+                                               cfg.d_model)
+    if cfg.family == "encdec":
+        assert specs["extra_embeds"].shape == (b, cfg.encoder_seq,
+                                               cfg.d_model)
+
+
+def test_long_context_skip_policy():
+    """long_500k runs only for sub-quadratic attention archs."""
+    runs = [a for a in ARCH_IDS
+            if supports_shape(get_config(a), "long_500k")[0]]
+    assert sorted(runs) == ["gemma3-12b", "mamba2-1.3b", "zamba2-1.2b"]
+    for a in LONG_CONTEXT_SKIP:
+        ok, reason = supports_shape(get_config(a), "long_500k")
+        assert not ok and reason
+        # every other shape still runs
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert supports_shape(get_config(a), s)[0]
+
+
+def test_mesh_functions_do_not_touch_devices():
+    """Importing mesh module must not initialise jax device state."""
+    import importlib
+    import repro.launch.mesh as mesh_mod
+    importlib.reload(mesh_mod)  # would raise if module-level jax calls
+
+
+def test_param_count_sanity():
+    """Param formulas land within 20% of the published sizes."""
+    expected = {"qwen2-72b": 72.7e9, "qwen2.5-3b": 3.1e9,
+                "codeqwen1.5-7b": 7.2e9, "olmoe-1b-7b": 6.9e9,
+                "qwen3-moe-30b-a3b": 30.5e9, "mamba2-1.3b": 1.3e9,
+                "zamba2-1.2b": 1.2e9, "whisper-large-v3": 1.5e9}
+    for arch, n in expected.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < 0.2, (arch, got, n)

@@ -1,0 +1,97 @@
+"""Units for the structural HLO analyzer (roofline source of truth)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import (analyze, parse_hlo, shape_bytes,
+                                       weighted_totals)
+
+SYNTH = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %w = f32[8,8] constant({...})
+  %y = f32[8,8] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%y), to_apply=%add
+  %one = s32[] constant(1)
+  %niv = s32[] add(%iv, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%niv, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%iv, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %x)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,8]") == 256
+    assert shape_bytes("bf16[4]") == 8
+    assert shape_bytes("(f32[2], s32[3])") == 20
+
+
+def test_while_trip_count_weighting():
+    comps = parse_hlo(SYNTH)
+    out = weighted_totals(comps)
+    # dot: 2 * 64 * 8 = 1024 flops per iteration, 7 trips
+    assert out["flops"] == 1024 * 7
+    assert out["collective_counts"]["all-reduce"] == 7
+    assert out["collective_bytes"]["all-reduce"] == 256 * 7
+
+
+def test_analyze_real_program_flops_scale_with_depth():
+    """The reason this module exists: XLA cost_analysis counts while
+    bodies once; the structural walk must scale with layer count."""
+    from repro.configs.base import ModelConfig
+    from repro.models import get_model
+
+    def flops(nl):
+        cfg = ModelConfig(family="dense", num_layers=nl, d_model=64,
+                          num_heads=4, num_kv_heads=4, d_ff=128,
+                          vocab_size=128, remat=False)
+        m = get_model(cfg)
+        params = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+        batch = {"tokens": jax.ShapeDtypeStruct((2, 16), jnp.int32)}
+        comp = jax.jit(lambda p, b: m.apply(p, b)[0]).lower(
+            params, batch).compile()
+        return analyze(comp.as_text())["flops"]
+
+    f2, f8 = flops(2), flops(8)
+    assert f8 > 2.5 * f2, (f2, f8)
+
+
+def test_upcast_accounting_on_bf16_dot():
+    f = jax.jit(lambda a, b: a @ b)
+    big = jax.ShapeDtypeStruct((4096, 4096), jnp.bfloat16)
+    txt = f.lower(big, big).compile().as_text()
+    out = analyze(txt)
+    # two operand upcasts of 64 MiB each (dedup by shape -> 1 counted)
+    assert out["cpu_upcast_f32_bytes"] >= 4096 * 4096 * 4
+    assert out["cpu_upcast_f32_bytes_sites"] >= out["cpu_upcast_f32_bytes"]
+
+
+def test_no_upcasts_for_f32_program():
+    f = jax.jit(lambda a, b: a @ b)
+    big = jax.ShapeDtypeStruct((4096, 4096), jnp.float32)
+    txt = f.lower(big, big).compile().as_text()
+    assert analyze(txt)["cpu_upcast_f32_bytes"] == 0

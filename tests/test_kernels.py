@@ -1,0 +1,73 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(8,), (7,), (128,), (129,), (33, 65), (256, 128), (512, 513),
+          (3, 5, 130), (2, 2, 2, 17)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lars_update_kernel_matches_ref(shape, dtype):
+    rng = np.random.default_rng(hash((shape, str(dtype))) % 2**31)
+    w = jnp.asarray(rng.normal(size=shape), dtype)
+    g = jnp.asarray(rng.normal(size=shape), dtype)
+    m = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    kw = dict(base_lr=0.15, eta=1e-3, weight_decay=5e-4, momentum_mu=0.9)
+    m1, d1 = ops.lars_update(w, g, m, **kw)
+    m2, d2 = ref.ref_lars_update(w, g, m, **kw)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("nesterov", [False, True])
+def test_lars_update_kernel_nesterov(nesterov):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    m = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    kw = dict(base_lr=0.1, eta=1e-3, weight_decay=1e-4, momentum_mu=0.9,
+              nesterov=nesterov)
+    m1, d1 = ops.lars_update(w, g, m, **kw)
+    m2, d2 = ref.ref_lars_update(w, g, m, **kw)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("rows,d", [(1, 128), (4, 256), (17, 384),
+                                    (64, 512), (3, 3 * 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_matches_ref(rows, d, dtype):
+    rng = np.random.default_rng(rows * d)
+    x = jnp.asarray(rng.normal(size=(rows, d)), dtype)
+    w = jnp.asarray(rng.normal(size=(d,)) * 0.1, jnp.float32)
+    y1 = ops.rmsnorm(x, w)
+    y2 = ref.ref_rmsnorm(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), rtol=tol,
+                               atol=tol)
+
+
+def test_rmsnorm_kernel_batched_rank3():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 9, 256)), jnp.float32)
+    w = jnp.zeros((256,))
+    np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, w)),
+                               np.asarray(ref.ref_rmsnorm(x, w)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_force_ref_env(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    x = jnp.ones((4, 128))
+    w = jnp.zeros((128,))
+    np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, w)),
+                               np.asarray(ref.ref_rmsnorm(x, w)))

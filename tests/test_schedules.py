@@ -1,0 +1,75 @@
+"""Schedules: Eq. (4) warm-up+cosine, polynomial, Eq. (5)/(6) TVLARS φ_t."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedules
+
+
+def test_warmup_cosine_shape():
+    f = schedules.warmup_cosine(2.0, warmup_steps=10, total_steps=100)
+    assert float(f(jnp.int32(0))) == 0.0
+    np.testing.assert_allclose(float(f(jnp.int32(10))), 2.0, rtol=1e-5)
+    assert float(f(jnp.int32(5))) == pytest.approx(1.0)
+    # cosine anneal decreasing after warm-up
+    vals = [float(f(jnp.int32(t))) for t in range(10, 100, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+    assert float(f(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_polynomial_decay():
+    f = schedules.polynomial(1.0, total_steps=50, power=2.0)
+    assert float(f(jnp.int32(0))) == pytest.approx(1.0)
+    assert float(f(jnp.int32(50))) == pytest.approx(0.0)
+    assert float(f(jnp.int32(25))) == pytest.approx(0.25)
+
+
+def test_tvlars_phi_matches_eq5():
+    lam, de, alpha, gmin = 0.01, 100, 1.0, 0.05
+    f = schedules.tvlars_phi(lam, de, alpha, gmin)
+    for t in [0, 50, 100, 200, 1000]:
+        expected = 1.0 / (alpha + math.exp(lam * (t - de))) + gmin
+        np.testing.assert_allclose(float(f(jnp.int32(t))), expected,
+                                   rtol=1e-5)
+
+
+@settings(max_examples=200, deadline=None)
+@given(lam=st.floats(1e-6, 1e-1), de=st.integers(0, 10_000),
+       alpha=st.floats(0.5, 4.0), gmin=st.floats(0.0, 0.5),
+       t=st.integers(0, 200_000))
+def test_tvlars_phi_bounds_eq6(lam, de, alpha, gmin, t):
+    """Eq. (6): γ_min ≤ φ_t ≤ 1/(α+exp(−λ d_e)) (+γ_min offset)."""
+    f = schedules.tvlars_phi(lam, de, alpha, gmin)
+    lo, hi = schedules.tvlars_phi_bounds(lam, de, alpha, gmin)
+    v = float(f(jnp.int32(t)))
+    assert lo - 1e-6 <= v <= hi + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(lam=st.floats(1e-5, 1e-1), de=st.integers(0, 1000),
+       alpha=st.floats(0.5, 4.0))
+def test_tvlars_phi_monotone_decreasing(lam, de, alpha):
+    """Appendix D: dφ/dt ≤ 0 everywhere."""
+    f = schedules.tvlars_phi(lam, de, alpha, 0.0)
+    ts = np.linspace(0, 5 * de + 1000, 64).astype(np.int32)
+    vals = [float(f(jnp.int32(int(t)))) for t in ts]
+    assert all(a >= b - 1e-7 for a, b in zip(vals, vals[1:]))
+
+
+def test_tvlars_phi_holds_near_max_during_delay():
+    """'Initiating Exploration Excitation': φ stays near its max for
+    t << d_e, then anneals — unlike warm-up which STARTS at 0."""
+    f = schedules.tvlars_phi(0.01, 1000, 1.0, 0.0)
+    early = float(f(jnp.int32(0)))
+    _, hi = schedules.tvlars_phi_bounds(0.01, 1000, 1.0, 0.0)
+    assert early > 0.9 * hi
+    wa = schedules.warmup_cosine(1.0, 1000, 10_000)
+    assert float(wa(jnp.int32(0))) == 0.0  # the redundant-scaling issue
+
+
+def test_batch_scaling_rules():
+    assert schedules.sqrt_scaling(0.1, 1024, 256) == pytest.approx(0.2)
+    assert schedules.linear_scaling(0.1, 1024, 256) == pytest.approx(0.4)

@@ -1,0 +1,186 @@
+"""Distribution correctness on 8 fabricated CPU devices (subprocess).
+
+The dry-run proves lowering at pod scale; these tests prove NUMERICS:
+a (2,4) mesh train step with the full production sharding rules
+(fsdp + TP + sequence parallelism + vocab-parallel embed) must match the
+single-device result bit-for-bloody-close.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.models import layers as layers_lib
+from repro.core import build_optimizer
+from repro.training.train_state import TrainState
+from repro.training.trainer import make_train_step
+from repro.launch import sharding
+from repro.data.synthetic import lm_batch
+
+assert len(jax.devices()) == 8
+# dense: discrete MoE routing flips on f32-reduction near-ties under
+# sharding, making per-element parity meaningless; MoE is covered by the
+# loss-level check below.
+cfg = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=128, remat=True)
+m = get_model(cfg)
+opt = build_optimizer("tvlars", total_steps=10, learning_rate=1.0)
+toks, labels = lm_batch(jax.random.PRNGKey(1), 8, 32, cfg.vocab_size)
+batch = {"tokens": toks, "labels": labels}
+
+# single-device reference
+layers_lib.set_batch_sharding(None)
+params = m.init(jax.random.PRNGKey(0))
+state = TrainState.create(params, opt)
+step = jax.jit(make_train_step(m, opt))
+ref_state, ref_metrics = step(state, batch)
+ref_loss = float(ref_metrics["loss"])
+
+# (2, 4) mesh with full production sharding
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+with mesh:
+    layers_lib.set_batch_sharding(("data",), "model", model_size=4,
+                                  mesh=mesh)
+    state_sh = sharding.named(
+        mesh, sharding.state_pspecs(mesh, jax.eval_shape(lambda: state),
+                                    fsdp=True))
+    batch_sh = sharding.named(
+        mesh, sharding.batch_pspecs(
+            mesh, jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)))
+    state_p = jax.device_put(state, state_sh)
+    batch_p = jax.device_put(batch, batch_sh)
+    step_sh = jax.jit(make_train_step(m, opt),
+                      in_shardings=(state_sh, batch_sh))
+    new_state, metrics = step_sh(state_p, batch_p)
+    sh_loss = float(metrics["loss"])
+
+print("REF", ref_loss, "SHARDED", sh_loss)
+np.testing.assert_allclose(sh_loss, ref_loss, rtol=1e-3)
+# params after one step match
+for a, b in zip(jax.tree_util.tree_leaves(ref_state.params),
+                jax.tree_util.tree_leaves(new_state.params)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(jax.device_get(b)),
+                               rtol=2e-2, atol=2e-3)
+print("SHARDED_TRAIN_STEP_MATCHES")
+
+# MoE: loss-level agreement (routing ties may flip under sharding)
+cfg2 = ModelConfig(family="moe", num_layers=2, d_model=64, num_heads=4,
+                   num_kv_heads=2, d_ff=32, vocab_size=128, num_experts=4,
+                   experts_per_token=2, remat=True)
+m2 = get_model(cfg2)
+layers_lib.set_batch_sharding(None)
+params2 = m2.init(jax.random.PRNGKey(0))
+state2 = TrainState.create(params2, opt)
+_, ref2 = jax.jit(make_train_step(m2, opt))(state2, batch)
+with mesh:
+    layers_lib.set_batch_sharding(("data",), "model", model_size=4,
+                                  mesh=mesh)
+    st_sh2 = sharding.named(
+        mesh, sharding.state_pspecs(mesh, jax.eval_shape(lambda: state2),
+                                    fsdp=True))
+    _, m2m = jax.jit(make_train_step(m2, opt),
+                     in_shardings=(st_sh2, batch_sh))(
+        jax.device_put(state2, st_sh2), batch_p)
+np.testing.assert_allclose(float(m2m["loss"]), float(ref2["loss"]),
+                           rtol=5e-3)
+print("SHARDED_MOE_LOSS_MATCHES")
+"""
+
+DECODE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.models import layers as layers_lib
+from repro.launch import sharding
+from repro.serving.decode import make_serve_step
+
+cfg = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=4, d_ff=128, vocab_size=128, remat=False)
+m = get_model(cfg)
+layers_lib.set_batch_sharding(None)
+params = m.init(jax.random.PRNGKey(0))
+toks = jnp.ones((8, 1), jnp.int32)
+cache = m.init_cache(params, 8, 16, None)
+serve = make_serve_step(m)
+ref_tok, _ = serve(params, cache, toks, jnp.int32(0))
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+with mesh:
+    layers_lib.set_batch_sharding(("data",), None, model_size=4, mesh=mesh)
+    params_sh = sharding.named(
+        mesh, sharding.state_pspecs(
+            mesh, jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)))
+    cache_sh = sharding.named(
+        mesh, sharding.cache_pspecs(
+            mesh, jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)))
+    params_p = jax.device_put(params, params_sh)
+    cache_p = jax.device_put(cache, cache_sh)
+    step = jax.jit(serve, in_shardings=(
+        params_sh, cache_sh, None, None))
+    tok, _ = step(params_p, cache_p, toks, jnp.int32(0))
+np.testing.assert_array_equal(np.asarray(ref_tok), np.asarray(tok))
+print("SHARDED_DECODE_MATCHES")
+"""
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], cwd=".",
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    assert "SHARDED_TRAIN_STEP_MATCHES" in _run(SCRIPT)
+
+
+@pytest.mark.slow
+def test_sharded_decode_matches_single_device():
+    assert "SHARDED_DECODE_MATCHES" in _run(DECODE_SCRIPT)
+
+
+def test_pspec_rules_divisibility_guard():
+    """Whisper's 20 heads on a 16-way model axis must stay replicated."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import sharding as sh
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = sh.leaf_pspec(
+        (_jax.tree_util.DictKey("attn"), _jax.tree_util.DictKey("wq")),
+        _jax.ShapeDtypeStruct((1280, 20, 64), "float32"), FakeMesh())
+    assert spec == P(None, None, None)    # 20 % 16 != 0 -> replicated
+    spec2 = sh.leaf_pspec(
+        (_jax.tree_util.DictKey("attn"), _jax.tree_util.DictKey("wq")),
+        _jax.ShapeDtypeStruct((4096, 32, 128), "float32"), FakeMesh())
+    assert spec2 == P(None, "model", None)
+    spec3 = sh.leaf_pspec(
+        (_jax.tree_util.DictKey("mlp"), _jax.tree_util.DictKey("wi")),
+        _jax.ShapeDtypeStruct((4096, 14336), "float32"), FakeMesh(),
+        fsdp=True)
+    assert spec3 == P(("pod", "data")[1:], "model") or \
+        spec3 == P("data", "model")

@@ -1,0 +1,219 @@
+"""Data pipeline, losses, checkpoint, serving, trainer integration."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.configs.base import ModelConfig
+from repro.core import build_optimizer
+from repro.data.synthetic import (ClassificationData, batch_iterator,
+                                  lm_batch, two_view_batch)
+from repro.models import get_model
+from repro.serving.decode import generate
+from repro.training import losses
+from repro.training.train_state import TrainState
+from repro.training.trainer import (fit, make_classifier_step,
+                                    make_ssl_step, make_train_step)
+
+
+# ----- data -----
+
+def test_classification_data_deterministic():
+    d = ClassificationData(seed=3)
+    x1, y1 = d.batch(jax.random.PRNGKey(0), 16)
+    x2, y2 = d.batch(jax.random.PRNGKey(0), 16)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    x3, _ = d.batch(jax.random.PRNGKey(1), 16)
+    assert not np.allclose(np.asarray(x1), np.asarray(x3))
+
+
+def test_classification_data_learnable_snr():
+    """Class means must be recoverable: nearest-mean classifier beats
+    chance on clean eval data."""
+    d = ClassificationData(num_classes=4, noise_scale=0.5, seed=0)
+    x, y = d.eval_set(512)
+    means = d.class_means()
+    dists = jnp.sum((x[:, None] - means[None]) ** 2, axis=(2, 3, 4))
+    acc = float(jnp.mean((jnp.argmin(dists, 1) == y)))
+    assert acc > 0.9
+
+
+def test_lm_batch_shapes_and_determinism():
+    t1, l1 = lm_batch(jax.random.PRNGKey(0), 4, 32, 101)
+    t2, l2 = lm_batch(jax.random.PRNGKey(0), 4, 32, 101)
+    assert t1.shape == (4, 32) and l1.shape == (4, 32)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    assert int(t1.max()) < 101
+
+
+def test_two_view_batch():
+    d = ClassificationData()
+    v1, v2 = two_view_batch(d, jax.random.PRNGKey(0), 8)
+    assert v1.shape == v2.shape
+    assert not np.allclose(np.asarray(v1), np.asarray(v2))
+
+
+def test_batch_iterator_streams():
+    d = ClassificationData()
+    it = batch_iterator(d, 4)
+    x1, _ = next(it)
+    x2, _ = next(it)
+    assert x1.shape == (4, 16, 16, 3)
+    assert not np.allclose(np.asarray(x1), np.asarray(x2))
+
+
+# ----- losses -----
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[1.0, 2.0, 0.5], [0.1, 0.2, 3.0]])
+    labels = jnp.asarray([1, 2])
+    manual = -np.mean([np.log(np.exp(2.0) / np.exp([1, 2, .5]).sum()),
+                       np.log(np.exp(3.0) / np.exp([.1, .2, 3.]).sum())])
+    np.testing.assert_allclose(float(losses.cross_entropy(logits, labels)),
+                               manual, rtol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), b=st.integers(1, 4),
+       s=st.sampled_from([4, 8]), v=st.sampled_from([16, 64]))
+def test_fused_ce_equals_reference(seed, b, s, v):
+    rng = np.random.default_rng(seed)
+    d = 12
+    h = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, v)) * 0.2, jnp.float32)
+    y = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    ref_val = losses.cross_entropy(h @ w, y)
+    fused = losses.fused_ce_from_hidden(h, w, y)
+    np.testing.assert_allclose(float(fused), float(ref_val), rtol=1e-5)
+
+
+def test_barlow_twins_identical_views_low_loss():
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    same = float(losses.barlow_twins_loss(z, z))
+    diff = float(losses.barlow_twins_loss(
+        z, jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)))
+    assert same < diff
+
+
+def test_accuracy():
+    logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+    assert float(losses.accuracy(logits, jnp.asarray([0, 1]))) == 1.0
+    assert float(losses.accuracy(logits, jnp.asarray([1, 0]))) == 0.0
+
+
+# ----- checkpoint -----
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ck")
+        save(path, tree, step=7)
+        assert latest_step(path) == 7
+        out = restore(path, tree)
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ck")
+        save(path, {"a": jnp.ones((2, 2))})
+        with pytest.raises(ValueError):
+            restore(path, {"a": jnp.ones((3, 3))})
+
+
+# ----- trainer / serving integration -----
+
+def _tiny_lm():
+    cfg = ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64, remat=False)
+    return cfg, get_model(cfg)
+
+
+def test_lm_training_reduces_loss():
+    cfg, m = _tiny_lm()
+    opt = build_optimizer("tvlars", total_steps=30, learning_rate=1.5)
+    state = TrainState.create(m.init(jax.random.PRNGKey(0)), opt)
+    step = make_train_step(m, opt)
+
+    def batches():
+        i = 0
+        while True:
+            t, l = lm_batch(jax.random.PRNGKey(i % 4), 8, 32, 64)
+            yield {"tokens": t, "labels": l}
+            i += 1
+
+    state, hist = fit(step, state, batches(), 60)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.97
+
+
+def test_classifier_training_reaches_high_accuracy():
+    from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+    data = ClassificationData(num_classes=4, noise_scale=0.6,
+                              image_size=8, seed=1)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                                 num_classes=4, hidden=64)
+    opt = build_optimizer("wa-lars", total_steps=80, learning_rate=0.4)
+    state = TrainState.create(params, opt)
+    step = make_classifier_step(apply_mlp_classifier, opt)
+    state, hist = fit(step, state, batch_iterator(data, 64), 80)
+    assert hist[-1]["accuracy"] > 0.8
+
+
+def test_ssl_training_runs():
+    from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+    data = ClassificationData(num_classes=4, image_size=8)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                                 num_classes=16, hidden=32)
+    opt = build_optimizer("tvlars", total_steps=10, learning_rate=0.5)
+    state = TrainState.create(params, opt)
+    step = make_ssl_step(apply_mlp_classifier, opt)
+
+    def views():
+        i = 0
+        while True:
+            yield two_view_batch(data, jax.random.PRNGKey(i), 32)
+            i += 1
+
+    state, hist = fit(step, state, views(), 10)
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_generate_greedy_deterministic():
+    cfg, m = _tiny_lm()
+    params = m.init(jax.random.PRNGKey(0))
+    prompt = jnp.ones((2, 4), jnp.int32)
+    o1 = generate(m, params, prompt, num_tokens=6)
+    o2 = generate(m, params, prompt, num_tokens=6)
+    assert o1.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_norm_recorder_fig2_telemetry():
+    from repro.core import NormRecorder
+    cfg, m = _tiny_lm()
+    opt = build_optimizer("nowa-lars", total_steps=10, learning_rate=0.5)
+    state = TrainState.create(m.init(jax.random.PRNGKey(0)), opt)
+    step = make_train_step(m, opt, record_norms=True)
+    rec = NormRecorder(state.params)
+
+    def batches():
+        while True:
+            t, l = lm_batch(jax.random.PRNGKey(0), 4, 16, 64)
+            yield {"tokens": t, "labels": l}
+
+    state, _ = fit(step, state, batches(), 10, recorder=rec)
+    arrs = rec.as_arrays()
+    assert arrs["lnr"].shape[0] == 10
+    summ = rec.summary()
+    assert np.isfinite(summ["max_initial_lnr"])

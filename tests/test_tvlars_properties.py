@@ -1,0 +1,79 @@
+"""Hypothesis property tests on the paper's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import apply_updates, schedules
+from repro.core.tvlars import tvlars
+from repro.core.lars import _trust_ratio
+
+arrays = st.integers(2, 6).flatmap(
+    lambda n: st.lists(
+        st.floats(-2.0, 2.0, allow_nan=False), min_size=n * n,
+        max_size=n * n).map(lambda v: np.array(v, np.float32).reshape(n, n)))
+
+
+@settings(max_examples=100, deadline=None)
+@given(w=arrays, g=arrays, eta=st.floats(1e-4, 1e-1))
+def test_trust_ratio_positive_and_finite(w, g, eta):
+    r = float(_trust_ratio(jnp.asarray(w), jnp.asarray(g), eta=eta,
+                           weight_decay=5e-4, eps=1e-9))
+    assert np.isfinite(r) and r > 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(w=arrays, g=arrays, c=st.floats(0.1, 10.0))
+def test_trust_ratio_grad_scale_invariant_direction(w, g, c):
+    """LARS §3.1: the scaled update γ·g/‖g‖ is invariant to grad scale
+    (the ratio absorbs it) — scaling g by c scales the ratio by 1/c."""
+    w, g = jnp.asarray(w), jnp.asarray(g)
+    if float(jnp.linalg.norm(g)) < 1e-3 or float(jnp.linalg.norm(w)) < 1e-3:
+        return
+    r1 = float(_trust_ratio(w, g, eta=1e-3, weight_decay=0.0, eps=0.0))
+    r2 = float(_trust_ratio(w, c * g, eta=1e-3, weight_decay=0.0, eps=0.0))
+    np.testing.assert_allclose(r2 * c, r1, rtol=1e-4)
+
+
+@settings(max_examples=60, deadline=None)
+@given(lam=st.floats(1e-6, 1e-1), de=st.integers(1, 5000),
+       gmin=st.floats(1e-4, 0.4))
+def test_tvlars_converges_to_lars_like_floor(lam, de, gmin):
+    """'Alignment with LARS': φ_t -> γ_min for t >> d_e (late phase)."""
+    f = schedules.tvlars_phi(lam, de, 1.0, gmin)
+    t_late = de + int(80.0 / lam)
+    v = float(f(jnp.int32(min(t_late, 10**9))))
+    np.testing.assert_allclose(v, gmin, rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_tvlars_update_finite_on_random_problems(seed):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(6, 6)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(6,)), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.normal(size=(6, 6)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(6,)), jnp.float32)}
+    opt = tvlars(1.0, lam=1e-3, delay_steps=5)
+    state = opt.init(params)
+    p = params
+    for _ in range(4):
+        u, state = opt.update(grads, state, p)
+        p = apply_updates(p, u)
+    for leaf in jax.tree_util.tree_leaves(p):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 64))
+def test_unbiased_large_batch_gradient_theorem(b):
+    """Theorem 3.2: Var[batch grad] ≈ σ²/B on a linear-gaussian problem
+    (checked as a Monte-Carlo sanity of the bound, within slack)."""
+    rng = np.random.default_rng(b)
+    # point gradients g_i = ḡ + Δg_i with known variance
+    gbar = np.ones(4)
+    sigma2 = 4.0
+    samples = rng.normal(gbar, np.sqrt(sigma2), size=(2000, b, 4))
+    batch_grads = samples.mean(axis=1)          # [2000, 4]
+    emp_var = batch_grads.var(axis=0).mean()
+    assert emp_var <= (sigma2 / b) * 1.35        # bound + MC slack

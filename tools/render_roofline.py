@@ -1,0 +1,26 @@
+"""Render the §Roofline markdown table from experiments/dryrun JSONs."""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.bench_roofline import roofline_rows  # noqa: E402
+
+
+def main() -> None:
+    rows = roofline_rows("single")
+    print("| arch | shape | compute s | memory s | collective s | "
+          "dominant | model/HLO flops | GiB/dev raw | GiB/dev TPU-adj |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | "
+                  f"— | — | — |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+              f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+              f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+              f"{r['mem_gib']:.1f} | {r['mem_gib_tpu_adj']:.1f} |")
+
+
+if __name__ == "__main__":
+    main()
