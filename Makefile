@@ -1,0 +1,11 @@
+.PHONY: check test bench
+
+# tier-1 suite + REPRO_FORCE_REF=1 oracle re-run (both dispatch modes)
+check:
+	sh tools/check.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench:
+	PYTHONPATH=src:. python benchmarks/bench_kernels.py

@@ -1,10 +1,20 @@
 """Pallas-kernel micro-benchmarks.
 
 On this CPU container the kernels run in interpret mode, so wall-time is
-NOT indicative of TPU performance — the relevant numbers are the ref-vs-
-kernel HBM-traffic model (derived column): the fused LARS update reads
-3 tensors + writes 2 (5 passes) vs >=9 passes for the unfused pytree
-update (measured from the jitted XLA HLO of the reference)."""
+NOT indicative of TPU performance — the relevant numbers are (a) the
+ref-vs-kernel HBM-traffic model (derived column) and (b) the
+``pallas_calls`` launch counts, which are exact and backend-independent:
+the per-tensor path issues 2 launches per >=2-D leaf, the segmented
+substrate path exactly 2 per optimizer STEP regardless of leaf count —
+that launch collapse is the whole point of the flat substrate
+(``core/flatten.py`` + ``kernels/segmented_update.py``).
+
+Sections:
+  * per-tensor fused LARS vs jitted reference (traffic model + fusions)
+  * optimizer-step dispatch sweep over model-registry param trees:
+    pure-jnp vs ``use_kernel="per_tensor"`` vs ``use_kernel="fused"``,
+    reporting us/step, pallas_call counts, and substrate state bytes.
+"""
 from __future__ import annotations
 
 import jax
@@ -12,7 +22,60 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.configs.base import ModelConfig
+from repro.core import apply_updates, build_optimizer
 from repro.kernels import ref
+from repro.kernels.ops import count_pallas_calls
+from repro.models import get_model
+from repro.training.train_state import TrainState, opt_buffer_bytes
+
+
+def _param_trees() -> dict:
+    """Small versions of the registry families' param-tree SHAPES —
+    realistic leaf counts/mixes at CPU-benchable sizes."""
+    trees = {}
+    for name, family, kw in [
+        ("dense-2l", "dense", {}),
+        ("moe-2l", "moe", dict(num_experts=4, experts_per_token=2)),
+    ]:
+        cfg = ModelConfig(family=family, num_layers=2, d_model=64,
+                          num_heads=2, num_kv_heads=2, d_ff=128,
+                          vocab_size=128, remat=False, **kw)
+        trees[name] = get_model(cfg).init(jax.random.PRNGKey(0))
+    return trees
+
+
+def bench_optimizer_dispatch() -> None:
+    rng = np.random.default_rng(0)
+    for tree_name, params in _param_trees().items():
+        grads = jax.tree_util.tree_map(
+            lambda p: jnp.asarray(rng.normal(size=p.shape), p.dtype),
+            params)
+        leaves = jax.tree_util.tree_leaves(params)
+        n_leaves = len(leaves)
+        n_adapt = sum(1 for p in leaves if p.ndim >= 2)
+        for opt_name in ("wa-lars", "tvlars", "lamb"):
+            for uk, label in ((False, "jnp"), ("per_tensor", "per_tensor"),
+                              ("fused", "fused")):
+                if opt_name != "wa-lars" and uk == "per_tensor":
+                    continue   # per-tensor kernel is heavy-ball LARS only
+                opt = build_optimizer(opt_name, total_steps=100,
+                                      learning_rate=0.2, use_kernel=uk)
+                state = TrainState.create(params, opt)
+
+                def step(g, s):
+                    u, os_ = opt.update(g, s.opt_state, s.params)
+                    return TrainState(s.step + 1,
+                                      apply_updates(s.params, u), os_)
+
+                n_pallas = count_pallas_calls(
+                    jax.make_jaxpr(step)(grads, state).jaxpr)
+                us = time_fn(jax.jit(step), grads, state)
+                emit(f"kernels/opt_step/{tree_name}/{opt_name}/{label}",
+                     us,
+                     f"pallas_calls={n_pallas} leaves={n_leaves} "
+                     f"adapt={n_adapt} "
+                     f"opt_state_bytes={opt_buffer_bytes(state)}")
 
 
 def main() -> None:
@@ -39,6 +102,8 @@ def main() -> None:
     rms_ref = jax.jit(lambda x, s: ref.ref_rmsnorm(x, s))
     emit("kernels/rmsnorm_ref_jit", time_fn(rms_ref, x, s),
          f"traffic_model={(x.size*4*2)/1e6:.1f}MB/2-passes")
+
+    bench_optimizer_dispatch()
 
 
 if __name__ == "__main__":

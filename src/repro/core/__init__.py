@@ -6,6 +6,8 @@ Public API:
     apply_updates / chain / GradientTransform   pytree transform plumbing
     schedules                warm-up+cosine, polynomial, tvlars_phi
     layer_norms / NormRecorder   LWN/LGN/LNR telemetry (Fig. 2)
+    layerwise_transform      shared trust-ratio core (LARS/TVLARS/LAMB)
+    flatten                  flat substrate for the fused kernel path
 """
 from repro.core.api import OPTIMIZERS, build_optimizer
 from repro.core.base import (GradientTransform, apply_updates, chain,
@@ -13,13 +15,15 @@ from repro.core.base import (GradientTransform, apply_updates, chain,
 from repro.core.instrumentation import LayerNorms, NormRecorder, layer_norms
 from repro.core.lamb import lamb
 from repro.core.lars import lars
+from repro.core.layerwise import layerwise_transform
 from repro.core.sgd import sgd
 from repro.core.tvlars import tvlars
-from repro.core import labels, schedules
+from repro.core import flatten, labels, schedules
 
 __all__ = [
     "OPTIMIZERS", "build_optimizer", "GradientTransform", "apply_updates",
     "chain", "clip_by_global_norm", "global_norm", "safe_norm",
-    "LayerNorms", "NormRecorder", "layer_norms", "lamb", "lars", "sgd",
-    "tvlars", "labels", "schedules",
+    "LayerNorms", "NormRecorder", "layer_norms", "lamb", "lars",
+    "layerwise_transform", "sgd", "tvlars", "flatten", "labels",
+    "schedules",
 ]

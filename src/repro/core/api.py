@@ -12,6 +12,14 @@ GradientTransform for:
 Batch-size LR scaling (§5.2.2): pass ``batch_size``/``base_batch_size``
 and the factory applies the sqrt rule to the target LR, and sets
 TVLARS's γ_min = (B/B_base)·1e-3 as in §5.2.1 unless overridden.
+
+``use_kernel`` selects the layer-wise update's dispatch path
+(``repro.core.layerwise``): ``False`` = pure-jnp tree_map,
+``"per_tensor"`` = two Pallas calls per >=2-D leaf (heavy-ball LARS
+only), ``"fused"`` (alias ``True``) = the flat substrate — the whole
+tree updated by exactly two segmented Pallas calls per step, covering
+LARS (nesterov, trust_clip), both TVLARS momentum styles, and LAMB.
+Unsupported flag combinations raise at build time.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ from repro.core import schedules
 from repro.core.base import GradientTransform
 from repro.core.lamb import lamb
 from repro.core.lars import lars
+from repro.core.layerwise import normalize_use_kernel
 from repro.core.sgd import sgd
 from repro.core.tvlars import tvlars
 
@@ -41,7 +50,7 @@ def build_optimizer(name: str, *, total_steps: int,
                     eta: float = 1e-3,
                     momentum: float = 0.9,
                     weight_decay: float = 5e-4,
-                    use_kernel: bool = False,
+                    use_kernel=False,   # False | "per_tensor" | "fused"/True
                     momentum_style: str = "paper",
                     ) -> GradientTransform:
     name = name.lower()
@@ -73,20 +82,27 @@ def build_optimizer(name: str, *, total_steps: int,
         # the clip replaces warm-up's job of bounding the early LNR.
         sched = schedules.polynomial(lr, total_steps)
         return lars(sched, eta=eta, momentum=momentum,
-                    weight_decay=weight_decay, trust_clip=10.0)
+                    weight_decay=weight_decay, trust_clip=10.0,
+                    use_kernel=use_kernel)
     if name == "nowa-lars":
         sched = schedules.polynomial(lr, total_steps)
         return lars(sched, eta=eta, momentum=momentum,
                     weight_decay=weight_decay, use_kernel=use_kernel)
     if name == "lamb":
         sched = schedules.warmup_cosine(lr, warmup_steps, total_steps)
-        return lamb(sched, weight_decay=weight_decay)
+        return lamb(sched, weight_decay=weight_decay,
+                    use_kernel=use_kernel)
     if name == "tvlars":
         return tvlars(lr, lam=lam, delay_steps=delay_steps, alpha=alpha,
                       gamma_min=gamma_min, eta=eta, momentum=momentum,
                       weight_decay=weight_decay,
                       momentum_style=momentum_style, use_kernel=use_kernel)
     if name == "sgd":
+        if normalize_use_kernel(use_kernel):
+            raise ValueError(
+                "sgd has no layer-wise kernel path; use_kernel must be "
+                "False (the trust-ratio kernels only apply to "
+                "lars/tvlars/lamb)")
         sched = schedules.warmup_cosine(lr, warmup_steps, total_steps)
         return sgd(sched, momentum=momentum, weight_decay=weight_decay)
     raise AssertionError(name)

@@ -1,0 +1,142 @@
+"""Flat parameter substrate for the fused multi-tensor optimizer path.
+
+The layer-wise optimizers (LARS Eq. 2, TVLARS Eq. 5, LAMB) are per-tensor
+streaming workloads; launching two Pallas kernels *per leaf* makes a
+hundreds-of-tensors model launch-bound. This module packs every leaf of a
+parameter pytree into ONE lane-padded f32 buffer of shape
+``(num_rows, LANES)`` so the whole optimizer step becomes two segmented
+``pallas_call``s (see ``repro.kernels.segmented_update``), regardless of
+how many tensors the model has.
+
+Layout: each leaf ("segment") is flattened, zero-padded up to a whole
+number of 128-lane rows, and placed at a static row offset — so every
+row of the flat buffer belongs to exactly one segment. Zero padding is
+exact for the segmented norms (adds 0 to Σx²) and inert for the
+elementwise apply (padded rows of every state buffer stay identically 0
+and are sliced off by :func:`unpack`).
+
+All metadata is static Python computed once per (treedef, shapes,
+labels) and cached — inside ``jit`` it folds into the trace, so packing
+lowers to a single fused gather/concat and no per-step host work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labels as labels_lib
+
+PyTree = Any
+
+LANES = 128          # TPU lane dimension — last dim of the flat buffer
+MAX_BLOCK_ROWS = 512  # (512, 128) f32 tile = 256 KiB per operand
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static segment metadata for one packed parameter tree.
+
+    ``shapes``/``sizes``/``adapt`` are per-segment (= per-leaf, in
+    ``tree_flatten`` order); ``row_offset``/``seg_rows`` give each
+    segment's row range inside the ``(num_rows, LANES)`` buffer.
+    """
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    sizes: tuple[int, ...]
+    row_offset: tuple[int, ...]
+    seg_rows: tuple[int, ...]
+    adapt: tuple[bool, ...]          # True = trust-ratio scaled (>=2-D)
+    num_rows: int                    # padded to a block_rows multiple
+    block_rows: int                  # grid tile height for the kernels
+    num_segments: int
+    nseg_pad: int                    # segments padded to a LANES multiple
+
+    # ---- derived jnp constants (trace-time; folded into the jaxpr) ----
+
+    def segment_ids(self) -> jnp.ndarray:
+        """(num_rows, 1) int32 row -> segment-id map. Padding tail rows
+        reuse the last segment id — they are all-zero so contribute
+        nothing to norms and produce zero state/deltas."""
+        ids = np.full((self.num_rows,), max(self.num_segments - 1, 0),
+                      np.int32)
+        for s, (off, rows) in enumerate(zip(self.row_offset,
+                                            self.seg_rows)):
+            ids[off:off + rows] = s
+        return jnp.asarray(ids.reshape(self.num_rows, 1))
+
+    def adapt_mask(self) -> jnp.ndarray:
+        """(num_segments,) bool — which segments take the trust ratio."""
+        return jnp.asarray(np.asarray(self.adapt, np.bool_))
+
+
+@functools.lru_cache(maxsize=64)
+def _build_spec_cached(treedef, shapes: tuple, labels: tuple) -> FlatSpec:
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    seg_rows = tuple(max(1, _ceil_to(n, LANES) // LANES) for n in sizes)
+    offsets, acc = [], 0
+    for r in seg_rows:
+        offsets.append(acc)
+        acc += r
+    block_rows = MAX_BLOCK_ROWS if acc >= MAX_BLOCK_ROWS else _ceil_to(acc, 8)
+    num_rows = _ceil_to(acc, block_rows)
+    nseg = len(shapes)
+    return FlatSpec(
+        treedef=treedef, shapes=shapes, sizes=sizes,
+        row_offset=tuple(offsets), seg_rows=seg_rows,
+        adapt=tuple(t == labels_lib.ADAPT for t in labels),
+        num_rows=num_rows, block_rows=block_rows, num_segments=nseg,
+        nseg_pad=_ceil_to(max(nseg, 1), LANES))
+
+
+def build_spec(params: PyTree, param_labels: PyTree | None = None
+               ) -> FlatSpec:
+    """Compute (cached) static packing metadata for ``params``."""
+    lab = param_labels if param_labels is not None \
+        else labels_lib.default_labels(params)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    lab_leaves = treedef.flatten_up_to(lab)
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    return _build_spec_cached(treedef, shapes, tuple(lab_leaves))
+
+
+def pack(leaves: Sequence[jnp.ndarray], spec: FlatSpec) -> jnp.ndarray:
+    """Pack leaf arrays (tree_flatten order) into (num_rows, LANES) f32."""
+    parts = []
+    for leaf, rows, size in zip(leaves, spec.seg_rows, spec.sizes):
+        flat = jnp.ravel(leaf).astype(jnp.float32)
+        pad = rows * LANES - size
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        parts.append(flat)
+    used = sum(spec.seg_rows)
+    tail = (spec.num_rows - used) * LANES
+    if tail or not parts:
+        parts.append(jnp.zeros((tail,), jnp.float32))
+    return jnp.concatenate(parts).reshape(spec.num_rows, LANES)
+
+
+def pack_tree(tree: PyTree, spec: FlatSpec) -> jnp.ndarray:
+    return pack(jax.tree_util.tree_leaves(tree), spec)
+
+
+def unpack(flat2d: jnp.ndarray, spec: FlatSpec) -> list[jnp.ndarray]:
+    """Slice the flat buffer back into per-leaf f32 arrays."""
+    flat = flat2d.reshape(-1)
+    out = []
+    for off, size, shape in zip(spec.row_offset, spec.sizes, spec.shapes):
+        start = off * LANES
+        out.append(flat[start:start + size].reshape(shape))
+    return out
+
+
+def unpack_tree(flat2d: jnp.ndarray, spec: FlatSpec) -> PyTree:
+    return jax.tree_util.tree_unflatten(spec.treedef, unpack(flat2d, spec))

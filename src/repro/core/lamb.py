@@ -9,73 +9,38 @@ Adam moments + layer-wise trust ratio:
 
 1-D params bypass the trust ratio (labels.py), as in the cited
 pytorch-optimizer reference implementation.
+
+Built on the shared ``repro.core.layerwise`` core; with
+``use_kernel="fused"`` (or ``True``) the Adam moments live as flat
+substrate buffers and the whole step — moments, segmented ‖w‖/‖r‖,
+trust scaling, apply — is two segmented Pallas calls
+(``kernels.segmented_update``, mode "lamb"). There is no per-tensor
+kernel for LAMB; ``use_kernel="per_tensor"`` raises.
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import labels as labels_lib
-from repro.core.base import GradientTransform, PyTree, safe_norm
+from repro.core.base import GradientTransform, PyTree
+from repro.core.layerwise import layerwise_transform
 from repro.core.schedules import Schedule
 
 
 class LambState(NamedTuple):
     step: jnp.ndarray
-    mu: PyTree
+    mu: PyTree      # per-leaf trees, or flat (rows, 128) when fused
     nu: PyTree
 
 
 def lamb(learning_rate: Schedule, *, b1: float = 0.9, b2: float = 0.999,
          eps: float = 1e-6, weight_decay: float = 5e-4,
          trust_clip: Optional[float] = 10.0,
-         param_labels: Optional[PyTree] = None) -> GradientTransform:
-
-    def init(params):
-        z = jax.tree_util.tree_map(
-            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
-        return LambState(step=jnp.zeros((), jnp.int32), mu=z,
-                         nu=jax.tree_util.tree_map(jnp.copy, z))
-
-    def update(grads, state, params=None):
-        if params is None:
-            raise ValueError("lamb requires params")
-        lab = param_labels if param_labels is not None \
-            else labels_lib.default_labels(params)
-        step = state.step + 1
-        base_lr = learning_rate(state.step)
-        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
-        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
-
-        def moments(g, mu, nu):
-            g32 = g.astype(jnp.float32)
-            new_mu = b1 * mu + (1.0 - b1) * g32
-            new_nu = b2 * nu + (1.0 - b2) * jnp.square(g32)
-            return new_mu, new_nu
-
-        mo = jax.tree_util.tree_map(moments, grads, state.mu, state.nu)
-        is_pair = lambda x: isinstance(x, tuple)
-        new_mu = jax.tree_util.tree_map(lambda o: o[0], mo, is_leaf=is_pair)
-        new_nu = jax.tree_util.tree_map(lambda o: o[1], mo, is_leaf=is_pair)
-
-        def per_leaf(mu, nu, w, tag):
-            w32 = w.astype(jnp.float32)
-            r = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
-            if tag == labels_lib.ADAPT:
-                r = r + weight_decay * w32
-                w_norm = safe_norm(w32)
-                r_norm = safe_norm(r)
-                ratio = jnp.where((w_norm > 0.0) & (r_norm > 0.0),
-                                  w_norm / r_norm, 1.0)
-                if trust_clip is not None:
-                    ratio = jnp.minimum(ratio, trust_clip)
-            else:
-                ratio = 1.0
-            return -base_lr * ratio * r
-
-        updates = jax.tree_util.tree_map(per_leaf, new_mu, new_nu, params, lab)
-        return updates, LambState(step=step, mu=new_mu, nu=new_nu)
-
-    return GradientTransform(init, update)
+         param_labels: Optional[PyTree] = None,
+         use_kernel=False) -> GradientTransform:
+    return layerwise_transform(
+        learning_rate, mode="lamb", state_cls=LambState, b1=b1, b2=b2,
+        eps=eps, weight_decay=weight_decay, trust_clip=trust_clip,
+        param_labels=param_labels, use_kernel=use_kernel,
+        optimizer_name="lamb")

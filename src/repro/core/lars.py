@@ -13,25 +13,36 @@ followed by momentum:  m ← μ·m + γ_t^k · (g + wd·w);  w ← w − m.
 1-D params (bias / norm) bypass the trust ratio (see ``labels.py``),
 matching the cited reference implementations.
 
-The trust-ratio + momentum + apply inner loop is the per-parameter
-hot-spot; ``use_kernel=True`` routes >=2-D leaves through the fused
-Pallas kernel in ``repro.kernels.ops`` (identical math, one HBM pass).
+The update itself is built by ``repro.core.layerwise`` (shared with
+TVLARS and LAMB). Dispatch story for the per-parameter hot-spot:
+
+  * ``use_kernel=False``        — pure-jnp tree_map (mesh-sharding
+                                  friendly; norms all-reduce per shard).
+  * ``use_kernel="per_tensor"`` — two Pallas calls per >=2-D leaf
+                                  (``kernels.lars_update``); heavy-ball
+                                  math only, so ``trust_clip`` raises.
+  * ``use_kernel="fused"``      — the flat substrate: the whole tree is
+                                  packed once and updated by two
+                                  segmented Pallas calls total
+                                  (``kernels.segmented_update``);
+                                  supports nesterov and ``trust_clip``.
+  * ``use_kernel=True``         — alias for ``"fused"``.
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import labels as labels_lib
-from repro.core.base import GradientTransform, PyTree, safe_norm
+from repro.core.base import GradientTransform, PyTree
+from repro.core.layerwise import layerwise_transform
 from repro.core.schedules import Schedule
+from repro.kernels import ref
 
 
 class LarsState(NamedTuple):
     step: jnp.ndarray
-    momentum: PyTree
+    momentum: PyTree    # per-leaf tree, or flat (rows, 128) when fused
 
 
 def _trust_ratio(w: jnp.ndarray, g: jnp.ndarray, eta: float,
@@ -39,13 +50,16 @@ def _trust_ratio(w: jnp.ndarray, g: jnp.ndarray, eta: float,
     """η·‖w‖ / (‖g‖ + wd·‖w‖ + eps) — the paper's LNR × η, guarded.
 
     Returns 1.0 when either norm is zero (reference-impl behaviour:
-    freshly-initialised zero layers take a plain step).
+    freshly-initialised zero layers take a plain step). Thin view over
+    the LIVE formula (``ref.trust_scale_table``'s "lars" branch) so the
+    trust-ratio unit/property tests exercise what the optimizers run.
     """
-    w_norm = safe_norm(w)    # LWN  ‖w^k‖
-    g_norm = safe_norm(g)    # LGN  ‖∇L(w^k)‖
-    denom = g_norm + weight_decay * w_norm + eps
-    ratio = eta * w_norm / denom
-    return jnp.where((w_norm > 0.0) & (g_norm > 0.0), ratio, 1.0)
+    table = ref.trust_scale_table(
+        jnp.sum(jnp.square(w.astype(jnp.float32))),
+        jnp.sum(jnp.square(g.astype(jnp.float32))),
+        jnp.asarray(True), 1.0, mode="lars", eta=eta,
+        weight_decay=weight_decay, eps=eps)
+    return table[0]    # base_lr=1 ⇒ sg == the bare ratio
 
 
 def lars(learning_rate: Schedule, *, eta: float = 1e-3,
@@ -53,55 +67,15 @@ def lars(learning_rate: Schedule, *, eta: float = 1e-3,
          eps: float = 1e-9, nesterov: bool = False,
          trust_clip: Optional[float] = None,
          param_labels: Optional[PyTree] = None,
-         use_kernel: bool = False) -> GradientTransform:
+         use_kernel=False) -> GradientTransform:
     """Build a LARS GradientTransform. Updates are returned as deltas.
 
     ``trust_clip`` caps the trust ratio (LAMBC-style clipping, Fong et
     al. 2020 — cited in the paper's related work as a stability
     alternative to warm-up); None reproduces vanilla LARS."""
-
-    def init(params):
-        return LarsState(
-            step=jnp.zeros((), jnp.int32),
-            momentum=jax.tree_util.tree_map(jnp.zeros_like, params))
-
-    def update(grads, state, params=None):
-        if params is None:
-            raise ValueError("lars requires params")
-        lab = param_labels if param_labels is not None \
-            else labels_lib.default_labels(params)
-        base_lr = learning_rate(state.step)
-
-        if use_kernel:
-            from repro.kernels import ops as kops
-
-        def per_leaf(g, w, m, tag):
-            g32 = g.astype(jnp.float32)
-            w32 = w.astype(jnp.float32)
-            if tag == labels_lib.ADAPT:
-                if (use_kernel and trust_clip is None
-                        and w.ndim >= 1 and w.size >= 8):
-                    new_m, delta = kops.lars_update(
-                        w32, g32, m, base_lr=base_lr, eta=eta,
-                        weight_decay=weight_decay, momentum_mu=momentum,
-                        eps=eps, nesterov=nesterov)
-                    return new_m, delta
-                ratio = _trust_ratio(w32, g32, eta, weight_decay, eps)
-                if trust_clip is not None:
-                    ratio = jnp.minimum(ratio, trust_clip)
-                scaled = base_lr * ratio * (g32 + weight_decay * w32)
-            else:
-                scaled = base_lr * g32  # plain step, no decay on bias/norm
-            new_m = momentum * m + scaled
-            step_dir = scaled + momentum * new_m if nesterov else new_m
-            return new_m, -step_dir
-
-        out = jax.tree_util.tree_map(per_leaf, grads, params,
-                                     state.momentum, lab)
-        new_m = jax.tree_util.tree_map(lambda o: o[0], out,
-                                       is_leaf=lambda x: isinstance(x, tuple))
-        updates = jax.tree_util.tree_map(lambda o: o[1], out,
-                                         is_leaf=lambda x: isinstance(x, tuple))
-        return updates, LarsState(step=state.step + 1, momentum=new_m)
-
-    return GradientTransform(init, update)
+    return layerwise_transform(
+        learning_rate, mode="lars", state_cls=LarsState, eta=eta,
+        momentum=momentum, weight_decay=weight_decay, eps=eps,
+        nesterov=nesterov, trust_clip=trust_clip,
+        param_labels=param_labels, use_kernel=use_kernel,
+        optimizer_name="lars")

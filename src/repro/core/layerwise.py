@@ -1,0 +1,218 @@
+"""Shared core for the layer-wise trust-ratio optimizer family.
+
+``lars.py``, ``tvlars.py`` and ``lamb.py`` used to carry three
+near-identical ``per_leaf``/tuple-unpacking ``tree_map`` bodies; they
+are now thin instantiations of :func:`layerwise_transform`, which owns
+labelling, state plumbing and the three dispatch paths:
+
+  * ``use_kernel=False``        — pure-jnp ``tree_map`` over leaves
+                                  (sharding-friendly: per-leaf norms
+                                  lower to per-shard partials +
+                                  all-reduce under a mesh).
+  * ``use_kernel="per_tensor"`` — the original fused Pallas kernel, two
+                                  ``pallas_call``s PER >=2-D leaf
+                                  (heavy-ball LARS math only).
+  * ``use_kernel="fused"``      — the flat substrate: all leaves packed
+                                  into one lane-padded f32 buffer
+                                  (``core.flatten``), the whole step is
+                                  two segmented ``pallas_call``s
+                                  (``kernels.segmented_update``)
+                                  regardless of leaf count. Momentum /
+                                  Adam state is STORED flat, so only
+                                  params+grads pay pack traffic per
+                                  step. Covers every mode: heavy ball,
+                                  nesterov, trust_clip, TVLARS "paper"
+                                  momentum, and LAMB.
+
+``use_kernel=True`` is accepted as an alias for ``"fused"``.
+Unsupported combinations (e.g. ``"per_tensor"`` with ``trust_clip`` or
+TVLARS "paper" momentum) raise at build time instead of silently
+falling back — see ``_validate_use_kernel``.
+
+The elementwise math itself lives in ``repro.kernels.ref``
+(:func:`~repro.kernels.ref.direction` /
+:func:`~repro.kernels.ref.integrate` /
+:func:`~repro.kernels.ref.trust_scale_table`) and is shared verbatim by
+all three paths, so they agree by construction.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatten
+from repro.core import labels as labels_lib
+from repro.core.base import GradientTransform, PyTree
+from repro.kernels import ref
+
+UseKernel = Union[bool, str]
+
+KERNEL_CHOICES = (False, "per_tensor", "fused")
+
+# which (mode, feature) combos the per-tensor kernel can express
+_PER_TENSOR_MODES = ("lars",)
+
+
+def normalize_use_kernel(use_kernel: UseKernel) -> UseKernel:
+    """Map the public flag onto ``False | "per_tensor" | "fused"``.
+
+    ``True`` historically meant the per-tensor kernel; it now aliases
+    the strictly-more-capable fused path.
+    """
+    if use_kernel is True:
+        return "fused"
+    if use_kernel in (False, None):
+        return False
+    if use_kernel not in ("per_tensor", "fused"):
+        raise ValueError(
+            f"use_kernel={use_kernel!r}; expected one of "
+            f"{(False, True) + KERNEL_CHOICES[1:]}")
+    return use_kernel
+
+
+def _validate_use_kernel(use_kernel: UseKernel, *, mode: str,
+                         trust_clip, optimizer: str) -> None:
+    if use_kernel != "per_tensor":
+        return
+    if mode not in _PER_TENSOR_MODES:
+        raise ValueError(
+            f"{optimizer}: use_kernel='per_tensor' only supports "
+            f"heavy-ball LARS math (got mode={mode!r}); use "
+            f"use_kernel='fused' which covers it")
+    if trust_clip is not None:
+        raise ValueError(
+            f"{optimizer}: use_kernel='per_tensor' does not support "
+            f"trust_clip; use use_kernel='fused'")
+
+
+def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
+                        mode: str,
+                        state_cls: Any,
+                        eta: float = 1e-3,
+                        momentum: float = 0.9,
+                        weight_decay: float = 5e-4,
+                        b1: float = 0.9,
+                        b2: float = 0.999,
+                        eps: float = 1e-9,
+                        nesterov: bool = False,
+                        trust_clip: Optional[float] = None,
+                        param_labels: Optional[PyTree] = None,
+                        use_kernel: UseKernel = False,
+                        optimizer_name: str = "layerwise",
+                        ) -> GradientTransform:
+    """Build a layer-wise GradientTransform. Updates are deltas.
+
+    ``mode``: "lars" (heavy ball, optional nesterov), "paper" (TVLARS
+    Algorithm 1 parameter-space momentum) or "lamb" (Adam moments).
+    ``state_cls(step, *bufs)`` is the optimizer's public state
+    NamedTuple; buffers are momentum trees (unfused/per-tensor) or flat
+    ``(rows, 128)`` substrate arrays (fused).
+    """
+    if mode not in ref.MODES:
+        raise ValueError(f"unknown mode {mode!r}; one of {ref.MODES}")
+    use_kernel = normalize_use_kernel(use_kernel)
+    _validate_use_kernel(use_kernel, mode=mode, trust_clip=trust_clip,
+                         optimizer=optimizer_name)
+    n_bufs = 2 if mode == "lamb" else 1
+
+    def _labels(params):
+        return param_labels if param_labels is not None \
+            else labels_lib.default_labels(params)
+
+    def _init_buffer_trees(params):
+        if mode == "paper":
+            # copy=True: f32->f32 astype would alias the param buffer and
+            # break donation (same buffer donated twice in train_step)
+            return (jax.tree_util.tree_map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True),
+                params),)
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return tuple(zeros() for _ in range(n_bufs))
+
+    def init(params):
+        bufs = _init_buffer_trees(params)
+        if use_kernel == "fused":
+            spec = flatten.build_spec(params, _labels(params))
+            bufs = tuple(flatten.pack_tree(b, spec) for b in bufs)
+        return state_cls(jnp.zeros((), jnp.int32), *bufs)
+
+    def _step_scalars(state):
+        base_lr = base_lr_fn(state.step)
+        stepf = (state.step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+        return base_lr, bc1, bc2
+
+    # ---- fused path: flat substrate, two pallas_calls per step ----
+
+    def _update_fused(grads, state, params):
+        spec = flatten.build_spec(params, _labels(params))
+        base_lr, bc1, bc2 = _step_scalars(state)
+        from repro.kernels import ops as kops
+        new_bufs, delta2d = kops.segmented_update(
+            flatten.pack_tree(params, spec), flatten.pack_tree(grads, spec),
+            tuple(state[1:]),
+            seg_ids=spec.segment_ids(), adapt_mask=spec.adapt_mask(),
+            base_lr=base_lr, mode=mode, eta=eta,
+            weight_decay=weight_decay, momentum=momentum, b1=b1, b2=b2,
+            eps=eps, nesterov=nesterov, trust_clip=trust_clip,
+            bc1=bc1, bc2=bc2)
+        updates = flatten.unpack_tree(delta2d, spec)
+        return updates, state_cls(state.step + 1, *new_bufs)
+
+    # ---- tree paths: per-leaf jnp math, optional per-tensor kernel ----
+
+    def _update_tree(grads, state, params):
+        lab = _labels(params)
+        base_lr, bc1, bc2 = _step_scalars(state)
+        if use_kernel == "per_tensor":
+            from repro.kernels import ops as kops
+
+        def per_leaf(g, w, *bufs_and_tag):
+            bufs, tag = bufs_and_tag[:-1], bufs_and_tag[-1]
+            g32 = g.astype(jnp.float32)
+            w32 = w.astype(jnp.float32)
+            adapt = tag == labels_lib.ADAPT
+            if (use_kernel == "per_tensor" and adapt
+                    and w.ndim >= 1 and w.size >= 8):
+                new_m, delta = kops.lars_update(
+                    w32, g32, bufs[0], base_lr=base_lr, eta=eta,
+                    weight_decay=weight_decay, momentum_mu=momentum,
+                    eps=eps, nesterov=nesterov)
+                return (new_m, delta)
+            d, bufs2 = ref.direction(mode, w32, g32, bufs, b1=b1, b2=b2,
+                                     bc1=bc1, bc2=bc2, eps=eps)
+            # same table math as the fused host pass, on a 1-segment
+            # "tree": the leaf's Σw²/Σb² and its own adapt flag
+            bvec = d + weight_decay * w32 if mode == "lamb" else g32
+            table = ref.trust_scale_table(
+                jnp.sum(jnp.square(w32)), jnp.sum(jnp.square(bvec)),
+                jnp.asarray(adapt), base_lr, mode=mode, eta=eta,
+                weight_decay=weight_decay, eps=eps, trust_clip=trust_clip)
+            scaled = table[0] * d + table[1] * w32
+            new_bufs, delta = ref.integrate(mode, w32, bufs2, scaled,
+                                            momentum=momentum,
+                                            nesterov=nesterov)
+            return (*new_bufs, delta)
+
+        out = jax.tree_util.tree_map(per_leaf, grads, params,
+                                     *state[1:], lab)
+        is_out = lambda x: isinstance(x, tuple)
+        new_bufs = tuple(
+            jax.tree_util.tree_map(lambda o, k=k: o[k], out, is_leaf=is_out)
+            for k in range(n_bufs))
+        updates = jax.tree_util.tree_map(lambda o: o[n_bufs], out,
+                                         is_leaf=is_out)
+        return updates, state_cls(state.step + 1, *new_bufs)
+
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError(f"{optimizer_name} requires params")
+        if use_kernel == "fused":
+            return _update_fused(grads, state, params)
+        return _update_tree(grads, state, params)
+
+    return GradientTransform(init, update)

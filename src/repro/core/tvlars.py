@@ -23,17 +23,21 @@ LARS buffer (m ← μm + γ(g+wd·w); w ← w − m). Both are tested; see
 DESIGN.md §1 for the Algorithm-1 typo note.
 
 TVLARS uses NO external LR scheduler (Appendix B) — φ_t is the schedule.
+
+Kernel dispatch (shared ``repro.core.layerwise`` core): the fused flat
+substrate (``use_kernel="fused"``/``True``) covers BOTH momentum styles
+in two segmented Pallas calls per step; ``"per_tensor"`` only expresses
+the conventional heavy-ball buffer and raises for
+``momentum_style="paper"`` instead of silently falling back.
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import labels as labels_lib
-from repro.core.base import GradientTransform, PyTree, safe_norm
-from repro.core.lars import _trust_ratio
+from repro.core.base import GradientTransform, PyTree
+from repro.core.layerwise import layerwise_transform
 from repro.core.schedules import tvlars_phi
 
 
@@ -48,62 +52,18 @@ def tvlars(gamma_target: float, *, lam: float = 1e-4,
            momentum: float = 0.9, weight_decay: float = 5e-4,
            eps: float = 1e-9, momentum_style: str = "paper",
            param_labels: Optional[PyTree] = None,
-           use_kernel: bool = False) -> GradientTransform:
+           use_kernel=False) -> GradientTransform:
     """Build TVLARS. ``gamma_target`` is the target LR of Table 1;
     ``gamma_min`` is typically (B/B_base)·1e-3 (§5.2.1)."""
     if momentum_style not in ("paper", "lars"):
         raise ValueError(f"unknown momentum_style {momentum_style!r}")
     phi = tvlars_phi(lam, delay_steps, alpha, gamma_min)
 
-    def init(params):
-        if momentum_style == "paper":
-            # copy=True: f32->f32 astype would alias the param buffer and
-            # break donation (same buffer donated twice in train_step)
-            m0 = jax.tree_util.tree_map(
-                lambda p: jnp.array(p, dtype=jnp.float32, copy=True),
-                params)
-        else:
-            m0 = jax.tree_util.tree_map(
-                lambda p: jnp.zeros_like(p, jnp.float32), params)
-        return TVLarsState(step=jnp.zeros((), jnp.int32), momentum=m0)
+    def base_lr(step):
+        return gamma_target * phi(step)
 
-    def update(grads, state, params=None):
-        if params is None:
-            raise ValueError("tvlars requires params")
-        lab = param_labels if param_labels is not None \
-            else labels_lib.default_labels(params)
-        base_lr = gamma_target * phi(state.step)
-
-        if use_kernel:
-            from repro.kernels import ops as kops
-
-        def per_leaf(g, w, m, tag):
-            g32 = g.astype(jnp.float32)
-            w32 = w.astype(jnp.float32)
-            if tag == labels_lib.ADAPT:
-                if (use_kernel and momentum_style == "lars"
-                        and w.ndim >= 1 and w.size >= 8):
-                    new_m, delta = kops.lars_update(
-                        w32, g32, m, base_lr=base_lr, eta=eta,
-                        weight_decay=weight_decay, momentum_mu=momentum,
-                        eps=eps, nesterov=False)
-                    return new_m, delta
-                ratio = _trust_ratio(w32, g32, eta, weight_decay, eps)
-                scaled = base_lr * ratio * (g32 + weight_decay * w32)
-            else:
-                scaled = base_lr * g32
-            if momentum_style == "paper":
-                proposed = w32 - scaled                      # m_{t+1}
-                new_w = proposed + momentum * (proposed - m)  # Alg.1 l.8
-                return proposed, new_w - w32                 # buffer, delta
-            new_m = momentum * m + scaled
-            return new_m, -new_m
-
-        out = jax.tree_util.tree_map(per_leaf, grads, params,
-                                     state.momentum, lab)
-        is_pair = lambda x: isinstance(x, tuple)
-        new_m = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
-        updates = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_pair)
-        return updates, TVLarsState(step=state.step + 1, momentum=new_m)
-
-    return GradientTransform(init, update)
+    return layerwise_transform(
+        base_lr, mode=momentum_style, state_cls=TVLarsState, eta=eta,
+        momentum=momentum, weight_decay=weight_decay, eps=eps,
+        param_labels=param_labels, use_kernel=use_kernel,
+        optimizer_name="tvlars")

@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Here: the layer-wise optimizer step (the paper's per-tensor hot loop).
+#   lars_update.py       per-tensor fused LARS step (2 pallas_calls/leaf)
+#   segmented_update.py  whole-tree segmented step  (2 pallas_calls/step)
+#   ref.py               pure-jnp oracles + shared layer-wise math
+#   ops.py               dispatch (TPU native / interpret / REPRO_FORCE_REF)

@@ -1,4 +1,15 @@
-"""Fused LARS/TVLARS parameter-update Pallas TPU kernel.
+"""Fused LARS/TVLARS parameter-update Pallas TPU kernel — PER-TENSOR path.
+
+Dispatch story: this kernel is ``use_kernel="per_tensor"`` in
+``repro.core.layerwise`` — two ``pallas_call``s per >=2-D leaf, heavy
+ball only. It wins over pure XLA for a handful of large tensors, but a
+ResNet/transformer with hundreds of small leaves becomes launch-bound
+and tile-underfilled; the segmented substrate path
+(``use_kernel="fused"``, ``repro.kernels.segmented_update``) packs the
+whole tree into one lane-padded buffer and does the entire step — every
+leaf, every momentum style, LAMB included — in two ``pallas_call``s
+total. Prefer "fused"; this file stays as the simplest kernel reference
+and as a bisection point for substrate bugs.
 
 The optimizer inner loop is memory-bound: per parameter tensor it reads
 (w, g, m) and writes (m', w') — a pure streaming workload. Unfused, XLA

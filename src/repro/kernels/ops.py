@@ -4,6 +4,16 @@ On TPU the kernels compile natively; on CPU (this container) they run in
 ``interpret=True`` mode — same kernel body, executed in Python — so all
 correctness tests exercise the real kernel logic. ``REPRO_FORCE_REF=1``
 falls back to the pure-jnp oracles (useful for bisecting kernel bugs).
+
+Two kernel families back the layer-wise optimizers:
+
+  * ``lars_update``      — per-tensor fused step (two ``pallas_call``s
+                           per leaf); heavy-ball LARS only.
+  * ``segmented_update`` — whole-tree fused step on the flat substrate
+                           (two ``pallas_call``s per STEP, any leaf
+                           count); covers LARS (incl. nesterov +
+                           trust_clip), TVLARS both momentum styles,
+                           and LAMB. See ``repro.core.layerwise``.
 """
 from __future__ import annotations
 
@@ -14,6 +24,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.lars_update import lars_update_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.segmented_update import segmented_update_pallas
 
 
 def _interpret() -> bool:
@@ -37,8 +48,44 @@ def lars_update(w, g, m, *, base_lr, eta, weight_decay, momentum_mu,
         interpret=_interpret())
 
 
+def segmented_update(w2d, g2d, bufs, **kw):
+    """Segmented whole-tree layer-wise step -> (new_bufs, delta2d).
+
+    ``kw``: seg_ids, adapt_mask, base_lr, mode, eta, weight_decay,
+    momentum, b1, b2, eps, nesterov, trust_clip, bc1, bc2.
+    """
+    if _force_ref():
+        return ref.ref_segmented_update(w2d, g2d, bufs, **kw)
+    return segmented_update_pallas(w2d, g2d, bufs, interpret=_interpret(),
+                                   **kw)
+
+
 def rmsnorm(x, weight, *, eps: float = 1e-6):
     """Fused RMSNorm (gemma convention: scale = 1 + weight)."""
     if _force_ref():
         return ref.ref_rmsnorm(x, weight, eps=eps)
     return rmsnorm_pallas(x, weight, eps=eps, interpret=_interpret())
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Recursively count pallas_call eqns (incl. nested call jaxprs).
+
+    Launch accounting for the dispatch paths — exact and
+    backend-independent (works on interpret-mode jaxprs too). Used by
+    the parity tests and ``benchmarks/bench_kernels.py`` to evidence
+    the fused path's 2-launches-per-step invariant.
+    """
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            leaves = jax.tree_util.tree_leaves(
+                v, is_leaf=lambda x: hasattr(x, "eqns")
+                or hasattr(x, "jaxpr"))
+            for j in leaves:
+                if hasattr(j, "eqns"):
+                    n += count_pallas_calls(j)
+                elif hasattr(j, "jaxpr"):
+                    n += count_pallas_calls(j.jaxpr)
+    return n

@@ -2,11 +2,102 @@
 
 Each ``ref_*`` function implements exactly the math its kernel fuses;
 tests sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+
+This module also hosts the *shared* layer-wise update math
+(:func:`direction`, :func:`integrate`, :func:`trust_scale_table`) used
+by all three dispatch paths — the pure tree_map path in
+``repro.core.layerwise``, the per-tensor Pallas kernel, and the
+segmented (fused multi-tensor) kernel — so the paths agree by
+construction and parity tests only have to catch kernel plumbing bugs.
+
+The unified update for every optimizer in the family is
+
+    d          = direction(mode, ...)        # g, or the Adam direction
+    scaled     = sg·d + sw·w                 # sg = lr·ratio, sw = sg·wd
+    new, delta = integrate(mode, ...)        # heavy ball / Alg.1 / none
+
+with per-segment (sg, sw) from :func:`trust_scale_table`.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+MODES = ("lars", "paper", "lamb")
+
+
+# ---------------------------------------------------------------------------
+# shared elementwise math (modes: "lars" heavy-ball, "paper" Alg. 1, "lamb")
+# ---------------------------------------------------------------------------
+
+def direction(mode: str, w, g, bufs, *, b1: float = 0.9, b2: float = 0.999,
+              bc1=1.0, bc2=1.0, eps: float = 1e-6):
+    """Pre-trust-ratio descent direction + (for LAMB) updated moments.
+
+    Returns ``(d, new_bufs)``; for "lars"/"paper" the momentum buffer is
+    integrated later by :func:`integrate` and passes through unchanged.
+    """
+    if mode == "lamb":
+        mu, nu = bufs
+        new_mu = b1 * mu + (1.0 - b1) * g
+        new_nu = b2 * nu + (1.0 - b2) * jnp.square(g)
+        d = (new_mu / bc1) / (jnp.sqrt(new_nu / bc2) + eps)
+        return d, (new_mu, new_nu)
+    return g, bufs
+
+
+def integrate(mode: str, w, bufs, scaled, *, momentum: float = 0.9,
+              nesterov: bool = False):
+    """Momentum integration -> ``(new_bufs, delta)``; params' = w + delta.
+
+    * "lars":  m' = μm + scaled;  Δ = −m' (or nesterov −(scaled + μm'))
+    * "paper": Algorithm 1 l.7–8 — buffer stores previous *proposed*
+      params:  m' = w − scaled;  Δ = (m' − w) + μ(m' − m)
+    * "lamb":  moments were already advanced in :func:`direction`;
+      Δ = −scaled.
+    """
+    if mode == "paper":
+        (m,) = bufs
+        proposed = w - scaled
+        delta = (proposed - w) + momentum * (proposed - m)
+        return (proposed,), delta
+    if mode == "lars":
+        (m,) = bufs
+        new_m = momentum * m + scaled
+        delta = -(scaled + momentum * new_m) if nesterov else -new_m
+        return (new_m,), delta
+    return bufs, -scaled    # lamb
+
+
+def trust_scale_table(w2, b2, adapt_mask, base_lr, *, mode: str,
+                      eta: float, weight_decay: float, eps: float,
+                      trust_clip=None) -> jnp.ndarray:
+    """Per-segment (sg, sw) from per-segment Σw², Σb² -> (2, nseg) f32.
+
+    ``b`` is the trust denominator vector: g for LARS/TVLARS, the
+    wd-augmented Adam direction for LAMB. Non-ADAPT (1-D bypass)
+    segments get ratio 1 and no weight decay, reproducing the reference
+    implementations' bias/norm handling.
+    """
+    wn = jnp.sqrt(w2)
+    bn = jnp.sqrt(b2)
+    nonzero = (wn > 0.0) & (bn > 0.0)
+    if mode == "lamb":
+        ratio = jnp.where(nonzero, wn / jnp.where(nonzero, bn, 1.0), 1.0)
+    else:
+        ratio = jnp.where(
+            nonzero, eta * wn / (bn + weight_decay * wn + eps), 1.0)
+    if trust_clip is not None:
+        ratio = jnp.minimum(ratio, trust_clip)
+    ratio = jnp.where(adapt_mask, ratio, 1.0)
+    sg = jnp.asarray(base_lr, jnp.float32) * ratio
+    sw = jnp.where(adapt_mask, sg * weight_decay, 0.0)
+    return jnp.stack([sg, sw]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# per-tensor oracle (matches kernels/lars_update.py)
+# ---------------------------------------------------------------------------
 
 def ref_lars_update(w: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, *,
                     base_lr, eta: float, weight_decay: float,
@@ -27,6 +118,44 @@ def ref_lars_update(w: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, *,
     new_m = momentum_mu * m + scaled
     step_dir = scaled + momentum_mu * new_m if nesterov else new_m
     return new_m, -step_dir
+
+
+# ---------------------------------------------------------------------------
+# segmented (fused multi-tensor) oracle — matches kernels/segmented_update.py
+# ---------------------------------------------------------------------------
+
+def ref_segmented_update(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
+                         mode: str, eta: float, weight_decay: float,
+                         momentum: float, b1: float, b2: float, eps: float,
+                         nesterov: bool = False, trust_clip=None,
+                         bc1=1.0, bc2=1.0):
+    """Whole-tree layer-wise step on the flat substrate, in pure jnp.
+
+    Inputs are ``(num_rows, LANES)`` f32 buffers from
+    ``repro.core.flatten.pack`` plus the spec's ``(num_rows, 1)``
+    segment-id map and ``(nseg,)`` adapt mask. Returns
+    ``(new_bufs, delta2d)`` with the same flat layout.
+    """
+    nseg = adapt_mask.shape[0]
+    ids = seg_ids.reshape(-1)
+
+    d, bufs2 = direction(mode, w2d, g2d, bufs, b1=b1, b2=b2,
+                         bc1=bc1, bc2=bc2, eps=eps)
+    bvec = d + weight_decay * w2d if mode == "lamb" else g2d
+    row_w2 = jnp.sum(jnp.square(w2d), axis=1)
+    row_b2 = jnp.sum(jnp.square(bvec), axis=1)
+    w2 = jax.ops.segment_sum(row_w2, ids, num_segments=nseg)
+    b2sum = jax.ops.segment_sum(row_b2, ids, num_segments=nseg)
+
+    table = trust_scale_table(w2, b2sum, adapt_mask, base_lr, mode=mode,
+                              eta=eta, weight_decay=weight_decay, eps=eps,
+                              trust_clip=trust_clip)
+    sg = table[0][ids][:, None]
+    sw = table[1][ids][:, None]
+    scaled = sg * d + sw * w2d
+    new_bufs, delta = integrate(mode, w2d, bufs2, scaled,
+                                momentum=momentum, nesterov=nesterov)
+    return new_bufs, delta
 
 
 def ref_rmsnorm(x: jnp.ndarray, weight: jnp.ndarray,

@@ -1,0 +1,216 @@
+"""Segmented multi-tensor optimizer-update Pallas TPU kernels.
+
+The per-tensor kernel (``lars_update.py``) issues two ``pallas_call``s
+PER LEAF — launch-bound and tile-underfilled on models with hundreds of
+small tensors. These kernels operate on the flat substrate from
+``repro.core.flatten`` instead, so one optimizer step is exactly two
+``pallas_call``s TOTAL, regardless of leaf count:
+
+  pass 1  ``_seg_norm_*``   — one sweep over the (num_rows, 128) buffer
+                              accumulating per-SEGMENT Σw², Σb² into a
+                              (2, nseg_pad) VMEM table. Each row belongs
+                              to exactly one segment (flatten.py pads
+                              segments to whole rows), so the segmented
+                              reduction is per-row partial sums scattered
+                              by a one-hot(segment-id) matmul — an
+                              MXU-friendly scatter-add.
+  host    trust table       — ``ref.trust_scale_table``: per-segment
+                              (sg, sw) = (lr·ratio, lr·ratio·wd), with
+                              ratio forced to 1 and sw to 0 for 1-D
+                              bypass segments. O(nseg) scalar work.
+  pass 2  ``_seg_apply_*``  — fused elementwise update; each row GATHERS
+                              its (sg, sw) from the table (same one-hot
+                              matmul) and applies the mode's momentum
+                              math (heavy ball / Alg. 1 "paper" /
+                              LAMB's Adam moments).
+
+Modes (static, selected by ``functools.partial``):
+  * "lars"  — LARS / TVLARS(momentum_style="lars") heavy ball, optional
+              nesterov;  b = g.
+  * "paper" — TVLARS Algorithm 1 parameter-space momentum;  b = g.
+  * "lamb"  — Adam moments recomputed in BOTH passes (elementwise-cheap,
+              saves a full HBM round-trip of writing them twice);
+              b = m̂/(√v̂+eps) + wd·w.
+
+Traced step-dependent scalars (LAMB bias corrections) ride in a (1, 2)
+SMEM operand; everything else is baked in statically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.flatten import LANES, MAX_BLOCK_ROWS
+from repro.kernels import ref
+
+
+def _onehot(ids_block: jnp.ndarray, nseg_pad: int) -> jnp.ndarray:
+    """(B, 1) int32 segment ids -> (B, nseg_pad) f32 one-hot."""
+    cols = jax.lax.broadcasted_iota(
+        jnp.int32, (ids_block.shape[0], nseg_pad), 1)
+    return (ids_block == cols).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pass 1: segmented norms
+# ---------------------------------------------------------------------------
+
+def _seg_norm_lars(ids_ref, w_ref, g_ref, out_ref, *, nseg_pad: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    oh = _onehot(ids_ref[...], nseg_pad)
+    rows = jnp.stack([jnp.sum(w * w, axis=1), jnp.sum(g * g, axis=1)])
+    out_ref[...] += jnp.dot(rows, oh, preferred_element_type=jnp.float32)
+
+
+def _seg_norm_lamb(ids_ref, sc_ref, w_ref, g_ref, mu_ref, nu_ref, out_ref,
+                   *, nseg_pad: int, weight_decay: float, b1: float,
+                   b2: float, eps: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    d, _ = ref.direction("lamb", w, g, (mu_ref[...], nu_ref[...]),
+                         b1=b1, b2=b2, bc1=sc_ref[0, 0], bc2=sc_ref[0, 1],
+                         eps=eps)
+    b = d + weight_decay * w
+    oh = _onehot(ids_ref[...], nseg_pad)
+    rows = jnp.stack([jnp.sum(w * w, axis=1), jnp.sum(b * b, axis=1)])
+    out_ref[...] += jnp.dot(rows, oh, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: gathered-scale apply
+# ---------------------------------------------------------------------------
+
+def _gather_scales(ids_ref, tab_ref, nseg_pad: int):
+    """Per-row (sg, sw) via one-hot @ tableᵀ -> two (B, 1) columns."""
+    oh = _onehot(ids_ref[...], nseg_pad)
+    sgw = jnp.dot(oh, tab_ref[...].T, preferred_element_type=jnp.float32)
+    return sgw[:, 0:1], sgw[:, 1:2]
+
+
+def _seg_apply_lars(ids_ref, tab_ref, w_ref, g_ref, m_ref,
+                    newm_ref, delta_ref, *, nseg_pad: int, mode: str,
+                    momentum: float, nesterov: bool):
+    sg, sw = _gather_scales(ids_ref, tab_ref, nseg_pad)
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    scaled = sg * g + sw * w
+    (new_m,), delta = ref.integrate(mode, w, (m_ref[...],), scaled,
+                                    momentum=momentum, nesterov=nesterov)
+    newm_ref[...] = new_m
+    delta_ref[...] = delta
+
+
+def _seg_apply_lamb(ids_ref, sc_ref, tab_ref, w_ref, g_ref, mu_ref, nu_ref,
+                    newmu_ref, newnu_ref, delta_ref, *, nseg_pad: int,
+                    b1: float, b2: float, eps: float):
+    sg, sw = _gather_scales(ids_ref, tab_ref, nseg_pad)
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    d, (new_mu, new_nu) = ref.direction(
+        "lamb", w, g, (mu_ref[...], nu_ref[...]), b1=b1, b2=b2,
+        bc1=sc_ref[0, 0], bc2=sc_ref[0, 1], eps=eps)
+    newmu_ref[...] = new_mu
+    newnu_ref[...] = new_nu
+    delta_ref[...] = -(sg * d + sw * w)
+
+
+# ---------------------------------------------------------------------------
+# host-side wrappers
+# ---------------------------------------------------------------------------
+
+def segmented_update_pallas(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
+                            mode: str, eta: float, weight_decay: float,
+                            momentum: float, b1: float, b2: float,
+                            eps: float, nesterov: bool = False,
+                            trust_clip=None, bc1=1.0, bc2=1.0,
+                            interpret: bool = True):
+    """Whole-tree layer-wise step: exactly two ``pallas_call``s.
+
+    Same contract as ``ref.ref_segmented_update`` — flat ``(rows, 128)``
+    f32 buffers in, ``(new_bufs, delta2d)`` out.
+    """
+    if mode not in ref.MODES:
+        raise ValueError(f"unknown mode {mode!r}; one of {ref.MODES}")
+    rows, lanes = w2d.shape
+    assert lanes == LANES, w2d.shape
+    nseg = adapt_mask.shape[0]
+    nseg_pad = -(-nseg // LANES) * LANES
+    # mirrors flatten._build_spec_cached's padding: num_rows is either
+    # < MAX_BLOCK_ROWS (single grid step) or a multiple of it
+    block_rows = rows if rows < MAX_BLOCK_ROWS else MAX_BLOCK_ROWS
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+
+    block = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    ids_block = pl.BlockSpec((block_rows, 1), lambda i: (i, 0))
+    tab_block = pl.BlockSpec((2, nseg_pad), lambda i: (0, 0))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    sc = jnp.stack([jnp.asarray(bc1, jnp.float32),
+                    jnp.asarray(bc2, jnp.float32)]).reshape(1, 2)
+
+    # ---- pass 1: per-segment Σw², Σb² ----
+    if mode == "lamb":
+        norm_kernel = functools.partial(
+            _seg_norm_lamb, nseg_pad=nseg_pad, weight_decay=weight_decay,
+            b1=b1, b2=b2, eps=eps)
+        norm_in = [ids_block, smem, block, block, block, block]
+        norm_args = (seg_ids, sc, w2d, g2d, bufs[0], bufs[1])
+    else:
+        norm_kernel = functools.partial(_seg_norm_lars, nseg_pad=nseg_pad)
+        norm_in = [ids_block, block, block]
+        norm_args = (seg_ids, w2d, g2d)
+    table2 = pl.pallas_call(
+        norm_kernel,
+        grid=grid,
+        in_specs=norm_in,
+        out_specs=tab_block,
+        out_shape=jax.ShapeDtypeStruct((2, nseg_pad), jnp.float32),
+        interpret=interpret,
+    )(*norm_args)
+
+    # ---- host: per-segment trust table, padded back to nseg_pad ----
+    table = ref.trust_scale_table(
+        table2[0, :nseg], table2[1, :nseg], adapt_mask, base_lr, mode=mode,
+        eta=eta, weight_decay=weight_decay, eps=eps, trust_clip=trust_clip)
+    table = jnp.pad(table, ((0, 0), (0, nseg_pad - nseg)))
+
+    # ---- pass 2: gathered-scale elementwise apply ----
+    if mode == "lamb":
+        apply_kernel = functools.partial(
+            _seg_apply_lamb, nseg_pad=nseg_pad, b1=b1, b2=b2, eps=eps)
+        in_specs = [ids_block, smem, tab_block, block, block, block, block]
+        args = (seg_ids, sc, table, w2d, g2d, bufs[0], bufs[1])
+        n_out = 3
+    else:
+        apply_kernel = functools.partial(
+            _seg_apply_lars, nseg_pad=nseg_pad, mode=mode,
+            momentum=momentum, nesterov=nesterov)
+        in_specs = [ids_block, tab_block, block, block, block]
+        args = (seg_ids, table, w2d, g2d, bufs[0])
+        n_out = 2
+    outs = pl.pallas_call(
+        apply_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[block] * n_out,
+        out_shape=[jax.ShapeDtypeStruct(w2d.shape, jnp.float32)] * n_out,
+        interpret=interpret,
+    )(*args)
+    return tuple(outs[:-1]), outs[-1]

@@ -106,9 +106,11 @@ _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
                      r"((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))")
 
 
+# operand may carry an inline type annotation (newer XLA text dumps):
+#   %c = f32[4096,4096]{1,0} convert(bf16[4096,4096]{1,0} %p)
 _CONVERT_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(f32\[[0-9,]*\])\S*\s+"
-    r"convert\(%?([\w.\-]+)\)")
+    r"convert\((?:([a-z0-9]+\[[0-9,]*\])\S*\s+)?%?([\w.\-]+)\)")
 _UPCAST_MIN_BYTES = 64 * 2**20
 
 
@@ -141,7 +143,7 @@ def parse_hlo(text: str, _upcast_acc: Optional[list] = None
                 allocates = (line.lstrip().startswith("ROOT")
                              if is_fusion_comp else True)
                 n = shape_bytes(cm.group(1))
-                src_type = symtab.get(cm.group(2), "")
+                src_type = cm.group(2) or symtab.get(cm.group(3), "")
                 if (allocates and n >= _UPCAST_MIN_BYTES
                         and src_type.startswith("bf16")
                         and _shape_elems_dims(src_type)

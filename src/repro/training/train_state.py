@@ -1,4 +1,11 @@
-"""TrainState — params + optimizer state + step, as a pytree."""
+"""TrainState — params + optimizer state + step, as a pytree.
+
+Works unchanged with every optimizer dispatch path: when the optimizer
+was built with ``use_kernel="fused"``, ``opt_state`` holds flat
+``(rows, 128)`` substrate buffers (see ``repro.core.flatten``) instead
+of per-leaf momentum trees — still ordinary pytree leaves, so jit/pjit,
+donation and checkpointing are unaffected.
+"""
 from __future__ import annotations
 
 from typing import Any, NamedTuple
@@ -22,3 +29,13 @@ class TrainState(NamedTuple):
 
 def param_count(state: TrainState) -> int:
     return sum(x.size for x in jax.tree_util.tree_leaves(state.params))
+
+
+def opt_buffer_bytes(state: TrainState) -> int:
+    """Bytes held by optimizer state (momentum / Adam moments).
+
+    Useful for comparing the per-leaf tree layout against the fused
+    flat-substrate layout (which pays a little lane/row padding in
+    exchange for two-kernel steps)."""
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(state.opt_state))

@@ -108,11 +108,20 @@ def _global_norm(tree) -> jnp.ndarray:
 
 def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
         *, recorder: Optional[instrumentation.NormRecorder] = None,
-        log_every: int = 0, log_fn: Callable = print
-        ) -> tuple[TrainState, list[dict]]:
+        log_every: int = 0, log_fn: Callable = print,
+        donate: Optional[bool] = None) -> tuple[TrainState, list[dict]]:
     """Host loop used by CPU-scale experiments. ``batches`` yields either
-    dict batches (LM) or tuples (classifier/SSL args)."""
-    step_fn = jax.jit(train_step)
+    dict batches (LM) or tuples (classifier/SSL args).
+
+    ``donate`` donates the TrainState argument to the jitted step so
+    params and optimizer buffers update in place — this is what makes
+    the fused optimizer path's flat momentum buffers memory-neutral at
+    scale. Default: on for tpu/gpu, off on CPU (where XLA cannot reuse
+    donated buffers and would warn every call)."""
+    if donate is None:
+        donate = jax.default_backend() in ("tpu", "gpu")
+    step_fn = jax.jit(train_step, donate_argnums=(0,)) if donate \
+        else jax.jit(train_step)
     history: list[dict] = []
     for i in range(num_steps):
         batch = next(batches)

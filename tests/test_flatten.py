@@ -1,0 +1,98 @@
+"""Flat substrate (core/flatten.py): metadata + pack/unpack round trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flatten, labels
+
+MIXED_TREE = {
+    "dense": {"w": (8, 16), "b": (16,)},
+    "odd": (7,),                 # 1-D bypass, not a lane multiple
+    "scalar": (),                # 0-D
+    "t3": (3, 5, 13),            # odd 3-D
+    "wide": (2, 300),            # > one lane row per matrix row
+}
+
+
+def _make(tree_shapes, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.asarray(rng.normal(size=s), dtype), tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pack_unpack_round_trip(dtype):
+    tree = _make(MIXED_TREE, dtype)
+    spec = flatten.build_spec(tree)
+    flat = flatten.pack_tree(tree, spec)
+    assert flat.shape == (spec.num_rows, flatten.LANES)
+    assert flat.dtype == jnp.float32
+    out = flatten.unpack_tree(flat, spec)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b))
+
+
+def test_spec_metadata_invariants():
+    tree = _make(MIXED_TREE)
+    spec = flatten.build_spec(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    assert spec.num_segments == len(leaves)
+    # offsets partition the rows: monotone, non-overlapping, in-bounds
+    for i, (off, rows, size) in enumerate(zip(spec.row_offset,
+                                              spec.seg_rows, spec.sizes)):
+        assert rows * flatten.LANES >= size > (rows - 1) * flatten.LANES
+        if i + 1 < spec.num_segments:
+            assert spec.row_offset[i + 1] == off + rows
+    assert sum(spec.seg_rows) <= spec.num_rows
+    assert spec.num_rows % spec.block_rows == 0
+    assert spec.nseg_pad % flatten.LANES == 0
+    # adapt mask mirrors default labels (>=2-D leaves only)
+    lab = jax.tree_util.tree_leaves(labels.default_labels(tree))
+    assert spec.adapt == tuple(t == labels.ADAPT for t in lab)
+
+
+def test_segment_ids_cover_every_row():
+    tree = _make(MIXED_TREE)
+    spec = flatten.build_spec(tree)
+    ids = np.asarray(spec.segment_ids()).reshape(-1)
+    assert ids.shape == (spec.num_rows,)
+    for s, (off, rows) in enumerate(zip(spec.row_offset, spec.seg_rows)):
+        assert (ids[off:off + rows] == s).all()
+    # tail padding rows reuse the last segment id (rows are all-zero)
+    assert (ids[sum(spec.seg_rows):] == spec.num_segments - 1).all()
+
+
+def test_padding_is_zero_everywhere():
+    """Padding exactness is what makes the segmented norms correct."""
+    tree = _make(MIXED_TREE)
+    spec = flatten.build_spec(tree)
+    flat = np.asarray(flatten.pack_tree(tree, spec)).reshape(-1)
+    mask = np.zeros_like(flat, dtype=bool)
+    for off, size in zip(spec.row_offset, spec.sizes):
+        mask[off * flatten.LANES:off * flatten.LANES + size] = True
+    assert (flat[~mask] == 0.0).all()
+    # per-segment sum of squares survives packing exactly
+    for leaf, off, size in zip(jax.tree_util.tree_leaves(tree),
+                               spec.row_offset, spec.sizes):
+        seg = flat[off * flatten.LANES:off * flatten.LANES + size]
+        np.testing.assert_allclose(
+            np.sum(seg * seg), np.sum(np.square(np.asarray(leaf))),
+            rtol=1e-6)
+
+
+def test_spec_cache_hits_for_same_structure():
+    t1 = _make(MIXED_TREE, seed=0)
+    t2 = _make(MIXED_TREE, seed=1)
+    assert flatten.build_spec(t1) is flatten.build_spec(t2)
+
+
+def test_large_tree_uses_block_tiling():
+    tree = {"big": jnp.ones((1024, 256))}   # 2048 rows > MAX_BLOCK_ROWS
+    spec = flatten.build_spec(tree)
+    assert spec.block_rows == flatten.MAX_BLOCK_ROWS
+    assert spec.num_rows % flatten.MAX_BLOCK_ROWS == 0

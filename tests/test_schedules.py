@@ -4,7 +4,11 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dev dep: property tests skip, rest run
+    given = settings = st = None
 
 from repro.core import schedules
 
@@ -36,27 +40,33 @@ def test_tvlars_phi_matches_eq5():
                                    rtol=1e-5)
 
 
-@settings(max_examples=200, deadline=None)
-@given(lam=st.floats(1e-6, 1e-1), de=st.integers(0, 10_000),
-       alpha=st.floats(0.5, 4.0), gmin=st.floats(0.0, 0.5),
-       t=st.integers(0, 200_000))
-def test_tvlars_phi_bounds_eq6(lam, de, alpha, gmin, t):
-    """Eq. (6): γ_min ≤ φ_t ≤ 1/(α+exp(−λ d_e)) (+γ_min offset)."""
-    f = schedules.tvlars_phi(lam, de, alpha, gmin)
-    lo, hi = schedules.tvlars_phi_bounds(lam, de, alpha, gmin)
-    v = float(f(jnp.int32(t)))
-    assert lo - 1e-6 <= v <= hi + 1e-6
+if st is not None:
+    @settings(max_examples=200, deadline=None)
+    @given(lam=st.floats(1e-6, 1e-1), de=st.integers(0, 10_000),
+           alpha=st.floats(0.5, 4.0), gmin=st.floats(0.0, 0.5),
+           t=st.integers(0, 200_000))
+    def test_tvlars_phi_bounds_eq6(lam, de, alpha, gmin, t):
+        """Eq. (6): γ_min ≤ φ_t ≤ 1/(α+exp(−λ d_e)) (+γ_min offset)."""
+        f = schedules.tvlars_phi(lam, de, alpha, gmin)
+        lo, hi = schedules.tvlars_phi_bounds(lam, de, alpha, gmin)
+        v = float(f(jnp.int32(t)))
+        assert lo - 1e-6 <= v <= hi + 1e-6
 
+    @settings(max_examples=50, deadline=None)
+    @given(lam=st.floats(1e-5, 1e-1), de=st.integers(0, 1000),
+           alpha=st.floats(0.5, 4.0))
+    def test_tvlars_phi_monotone_decreasing(lam, de, alpha):
+        """Appendix D: dφ/dt ≤ 0 everywhere."""
+        f = schedules.tvlars_phi(lam, de, alpha, 0.0)
+        ts = np.linspace(0, 5 * de + 1000, 64).astype(np.int32)
+        vals = [float(f(jnp.int32(int(t)))) for t in ts]
+        assert all(a >= b - 1e-7 for a, b in zip(vals, vals[1:]))
+else:
+    def test_tvlars_phi_bounds_eq6():
+        pytest.importorskip("hypothesis")
 
-@settings(max_examples=50, deadline=None)
-@given(lam=st.floats(1e-5, 1e-1), de=st.integers(0, 1000),
-       alpha=st.floats(0.5, 4.0))
-def test_tvlars_phi_monotone_decreasing(lam, de, alpha):
-    """Appendix D: dφ/dt ≤ 0 everywhere."""
-    f = schedules.tvlars_phi(lam, de, alpha, 0.0)
-    ts = np.linspace(0, 5 * de + 1000, 64).astype(np.int32)
-    vals = [float(f(jnp.int32(int(t)))) for t in ts]
-    assert all(a >= b - 1e-7 for a, b in zip(vals, vals[1:]))
+    def test_tvlars_phi_monotone_decreasing():
+        pytest.importorskip("hypothesis")
 
 
 def test_tvlars_phi_holds_near_max_during_delay():

@@ -2,6 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (requirements-dev.txt); every test "
+           "here is a property test")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import apply_updates, schedules

@@ -1,0 +1,20 @@
+#!/usr/bin/env sh
+# One-shot verification: tier-1 suite on the default (Pallas interpret)
+# dispatch, then the kernel-adjacent tests again under REPRO_FORCE_REF=1
+# so BOTH dispatch modes (pallas kernels and pure-jnp oracles) are
+# exercised in a single invocation. Run from the repo root:  make check
+set -eu
+
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH
+
+echo "== tier-1 (Pallas interpret kernels) =="
+python -m pytest -x -q
+
+echo "== kernel-oracle re-run (REPRO_FORCE_REF=1) =="
+REPRO_FORCE_REF=1 python -m pytest -q \
+    tests/test_kernels.py tests/test_segmented_parity.py \
+    tests/test_optimizers.py
+
+echo "check: OK"
