@@ -1,6 +1,7 @@
-.PHONY: check test bench
+.PHONY: check test bench smoke
 
 # tier-1 suite + REPRO_FORCE_REF=1 oracle re-run (both dispatch modes)
+# + e2e launcher smoke with gradient accumulation (K>1)
 check:
 	sh tools/check.sh
 
@@ -9,3 +10,9 @@ test:
 
 bench:
 	PYTHONPATH=src:. python benchmarks/bench_kernels.py
+
+# end-to-end CPU smoke of the launcher: global batch 8 = 4 accumulated
+# microbatches of 2, optimizer applied once per global step
+smoke:
+	PYTHONPATH=src python -m repro.launch.train --smoke --steps 2 \
+	    --seq 64 --global-batch 8 --microbatch 2 --log-every 1

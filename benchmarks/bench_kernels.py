@@ -21,13 +21,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, peak_temp_bytes, time_fn
 from repro.configs.base import ModelConfig
 from repro.core import apply_updates, build_optimizer
+from repro.data.pipeline import stack_microbatches
+from repro.data.synthetic import lm_batch
 from repro.kernels import ref
 from repro.kernels.ops import count_pallas_calls
 from repro.models import get_model
 from repro.training.train_state import TrainState, opt_buffer_bytes
+from repro.training.trainer import make_train_step
 
 
 def _param_trees() -> dict:
@@ -78,6 +81,45 @@ def bench_optimizer_dispatch() -> None:
                      f"opt_state_bytes={opt_buffer_bytes(state)}")
 
 
+def bench_accumulation() -> None:
+    """Gradient-accumulation sweep: global batch = K × fixed microbatch.
+
+    The claim under test: with the accumulating step a global batch ≥8×
+    the device microbatch runs at FIXED peak memory (XLA temp bytes stay
+    flat as K grows, while the naive big-batch step's grow with the
+    global batch), and the fused substrate still applies the optimizer
+    in exactly 2 ``pallas_call``s per *global* step regardless of K.
+    """
+    cfg = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=2,
+                      num_kv_heads=2, d_ff=128, vocab_size=128, remat=False)
+    model = get_model(cfg)
+    micro, seq = 8, 32
+    opt = build_optimizer("wa-lars", total_steps=100, learning_rate=0.2,
+                          use_kernel="fused")
+    state = TrainState.create(model.init(jax.random.PRNGKey(0)), opt)
+    key = jax.random.PRNGKey(1)
+    for k in (1, 4, 8, 16):
+        g = micro * k
+        toks, labels = lm_batch(key, g, seq, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": labels}
+        # naive: one device pass over the whole global batch
+        naive = make_train_step(model, opt)
+        naive_peak = peak_temp_bytes(naive, state, batch)
+        # accumulating: K scanned microbatches, one optimizer apply;
+        # compile once (AOT) and reuse for both memory stats and timing
+        stacked = batch if k == 1 else stack_microbatches(batch, k)
+        step = make_train_step(model, opt, accum_steps=k)
+        n_pallas = count_pallas_calls(
+            jax.make_jaxpr(step)(state, stacked).jaxpr)
+        compiled = jax.jit(step).lower(state, stacked).compile()
+        stats = compiled.memory_analysis()
+        peak = int(stats.temp_size_in_bytes) if stats is not None else -1
+        us = time_fn(compiled, state, stacked)
+        emit(f"kernels/accum_step/global{g}_micro{micro}_k{k}", us,
+             f"pallas_calls={n_pallas} peak_temp_bytes={peak} "
+             f"naive_peak_temp_bytes={naive_peak}")
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     shape = (1024, 512)
@@ -104,6 +146,7 @@ def main() -> None:
          f"traffic_model={(x.size*4*2)/1e6:.1f}MB/2-passes")
 
     bench_optimizer_dispatch()
+    bench_accumulation()
 
 
 if __name__ == "__main__":

@@ -39,3 +39,21 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """The required ``name,us_per_call,derived`` CSV line to stdout."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def peak_temp_bytes(fn: Callable, *args) -> int:
+    """XLA's compiled scratch ("temp") allocation for ``fn(*args)``.
+
+    This is the backend-reported peak working set beyond inputs/outputs
+    — the number that stays FLAT under gradient accumulation (one
+    microbatch of activations + one f32 grad buffer) while growing
+    linearly with batch in the naive big-batch step. Returns -1 when the
+    backend exposes no memory analysis.
+    """
+    try:
+        stats = jax.jit(fn).lower(*args).compile().memory_analysis()
+        if stats is None:
+            return -1
+        return int(stats.temp_size_in_bytes)
+    except Exception:
+        return -1

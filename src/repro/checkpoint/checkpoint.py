@@ -42,28 +42,66 @@ def save(path: str, tree: Any, *, step: Optional[int] = None) -> None:
 
 
 def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like``, validating every leaf.
+
+    The stored metadata (num_leaves, per-leaf shape and dtype) is
+    checked against both the payload and the template *before* any
+    byte-view reinterpretation: a mismatched tree used to silently
+    mis-view byte payloads (e.g. restoring a per-leaf momentum
+    checkpoint into a fused flat-substrate state, or bf16 bytes into an
+    f32 template) — now every mismatch raises a ValueError naming the
+    leaf, the checkpoint value and the template value.
+    """
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
     leaves, treedef = jax.tree_util.tree_flatten(like)
     if meta["num_leaves"] != len(leaves):
         raise ValueError(
             f"checkpoint has {meta['num_leaves']} leaves, template has "
-            f"{len(leaves)}")
+            f"{len(leaves)} — restoring across optimizer layouts (e.g. "
+            f"per-leaf momentum trees vs the fused flat substrate) needs "
+            f"a template built with the same use_kernel mode")
     data = np.load(os.path.join(path, "arrays.npz"))
     dtypes = meta.get("dtypes", {})
+    shapes = meta.get("shapes", {})
     new_leaves = []
     for i, template in enumerate(leaves):
-        arr = data[f"leaf_{i}"]
-        want = dtypes.get(f"leaf_{i}")
-        if want and str(arr.dtype) != want:
+        key = f"leaf_{i}"
+        arr = data[key]
+        want_dtype = dtypes.get(key)
+        want_shape = shapes.get(key)
+        if want_dtype and str(arr.dtype) != want_dtype:
+            # byte-viewed payload (bfloat16 & friends): validate the
+            # byte count against the recorded shape/dtype before viewing
             import ml_dtypes
-            arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
-            arr = arr.reshape(meta["shapes"][f"leaf_{i}"])
+            np_dtype = np.dtype(getattr(ml_dtypes, want_dtype, want_dtype))
+            if want_shape is None:
+                raise ValueError(
+                    f"leaf {i}: checkpoint stores {want_dtype} bytes but "
+                    f"records no shape — cannot safely reinterpret")
+            expected = int(np.prod(want_shape)) * np_dtype.itemsize
+            if arr.dtype != np.uint8 or arr.nbytes != expected:
+                raise ValueError(
+                    f"leaf {i}: byte payload is {arr.nbytes}B "
+                    f"({arr.dtype}) but meta says shape {want_shape} "
+                    f"dtype {want_dtype} = {expected}B — checkpoint and "
+                    f"metadata disagree")
+            arr = arr.view(np_dtype).reshape(want_shape)
+        if want_shape is not None and tuple(arr.shape) != tuple(want_shape):
+            raise ValueError(
+                f"leaf {i}: payload shape {tuple(arr.shape)} != recorded "
+                f"shape {tuple(want_shape)} — corrupt checkpoint")
         if template is not None and hasattr(template, "shape") \
                 and tuple(arr.shape) != tuple(template.shape):
             raise ValueError(
-                f"leaf {i}: checkpoint shape {arr.shape} != template "
-                f"{template.shape}")
+                f"leaf {i}: checkpoint shape {tuple(arr.shape)} != "
+                f"template {tuple(template.shape)}")
+        if template is not None and hasattr(template, "dtype") \
+                and str(arr.dtype) != str(template.dtype):
+            raise ValueError(
+                f"leaf {i}: checkpoint dtype {arr.dtype} != template "
+                f"{template.dtype} — refusing to silently reinterpret; "
+                f"cast the template (or re-save) explicitly")
         new_leaves.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 

@@ -10,8 +10,13 @@ GradientTransform for:
   * ``"sgd"``        SGD + momentum + cosine
 
 Batch-size LR scaling (§5.2.2): pass ``batch_size``/``base_batch_size``
-and the factory applies the sqrt rule to the target LR, and sets
-TVLARS's γ_min = (B/B_base)·1e-3 as in §5.2.1 unless overridden.
+and the factory applies the chosen ``scaling_rule`` ("sqrt" default,
+"linear" = Goyal et al.) to the target LR, and sets TVLARS's
+γ_min = (B/B_base)·1e-3 as in §5.2.1 unless overridden.
+``batch_size`` is the **global** batch — the total samples consumed per
+optimizer step (``accum_steps × microbatch × data_parallel``), NOT the
+per-device or per-microbatch size; the launcher passes its
+``--global-batch`` here.
 
 ``use_kernel`` selects the layer-wise update's dispatch path
 (``repro.core.layerwise``): ``False`` = pure-jnp tree_map,
@@ -23,7 +28,6 @@ Unsupported flag combinations raise at build time.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 from repro.core import schedules
@@ -52,6 +56,7 @@ def build_optimizer(name: str, *, total_steps: int,
                     weight_decay: float = 5e-4,
                     use_kernel=False,   # False | "per_tensor" | "fused"/True
                     momentum_style: str = "paper",
+                    scaling_rule: str = "sqrt",
                     ) -> GradientTransform:
     name = name.lower()
     if name not in OPTIMIZERS:
@@ -59,8 +64,8 @@ def build_optimizer(name: str, *, total_steps: int,
 
     lr = learning_rate
     if batch_size is not None:
-        lr = schedules.sqrt_scaling(learning_rate, batch_size,
-                                    base_batch_size)
+        lr = schedules.batch_scaled_lr(learning_rate, batch_size,
+                                       base_batch_size, scaling_rule)
     if warmup_steps is None:
         warmup_steps = max(total_steps // 10, 1)
     if delay_steps is None:

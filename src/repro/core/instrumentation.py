@@ -9,6 +9,12 @@ For every parameter leaf k at step t we can log:
 ``layer_norms`` is jit-safe (returns stacked arrays); ``NormRecorder``
 accumulates host-side history for the benchmark plots/CSVs that
 reproduce Figures 2, 15–26.
+
+Under gradient accumulation the trainer calls these on the
+*accumulated* (global-batch-mean) gradients, so LGN/LNR traces reflect
+the true global batch, not the last microbatch. ``global_norm`` (the
+single shared f32 whole-tree norm, defined in ``core.base``) is
+re-exported here as the canonical import site for telemetry code.
 """
 from __future__ import annotations
 
@@ -19,7 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import labels as labels_lib
-from repro.core.base import PyTree, safe_norm
+from repro.core.base import PyTree, global_norm, safe_norm
+
+__all__ = ["LayerNorms", "NormRecorder", "global_norm", "layer_norms",
+           "safe_norm"]
 
 
 class LayerNorms(NamedTuple):

@@ -89,6 +89,28 @@ def sqrt_scaling(base_lr: float, batch_size: int, base_batch_size: int
     return base_lr * math.sqrt(batch_size / base_batch_size)
 
 
+BATCH_SCALING_RULES = ("sqrt", "linear")
+
+
+def batch_scaled_lr(base_lr: float, batch_size: int, base_batch_size: int,
+                    rule: str = "sqrt") -> float:
+    """Batch-size LR scaling by named rule — the one entry point the
+    optimizer factory uses.
+
+    ``batch_size`` must be the **global** batch: the total samples per
+    optimizer step, i.e. ``accum_steps × microbatch × data_parallel``.
+    Feeding a per-device or per-microbatch size here silently under-
+    scales the LR (and TVLARS's γ_min), which is exactly the class of
+    bug the launcher's old ``batch·seq//128`` heuristic caused.
+    """
+    if rule == "sqrt":
+        return sqrt_scaling(base_lr, batch_size, base_batch_size)
+    if rule == "linear":
+        return linear_scaling(base_lr, batch_size, base_batch_size)
+    raise ValueError(
+        f"unknown batch-scaling rule {rule!r}; one of {BATCH_SCALING_RULES}")
+
+
 def linear_scaling(base_lr: float, batch_size: int, base_batch_size: int
                    ) -> float:
     """γ = ε·(B/B_base)  (Goyal et al. 2018; used for γ_scale in Eq. 2)."""

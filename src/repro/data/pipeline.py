@@ -1,16 +1,22 @@
-"""Sharded global-batch pipeline.
+"""Sharded global-batch pipeline + microbatch streams.
 
 On a real pod each process feeds its local shard of the global batch;
 ``shard_batch`` places a host-side global batch onto the mesh with the
 batch dim sharded over the data axes (``("pod","data")`` when multi-pod)
 and everything else replicated — the exact layout ``train_step`` expects.
+
+Gradient accumulation adds one wrinkle: an accumulating step consumes
+``[K, B/K, ...]`` leaves (``stack_microbatches``), where the *scan* axis
+K stays replicated and the *microbatch* axis (dim 1) is the one sharded
+over data — ``shard_batch(..., batch_dim=1)`` / ``microbatch_pspec``.
+Accumulation therefore composes with the data/model mesh axes: the
+global batch is ``K × microbatch × data_parallel`` samples.
 """
 from __future__ import annotations
 
 from typing import Any, Iterator
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -22,14 +28,51 @@ def batch_pspec(mesh: Mesh) -> P:
     return P(data_axes(mesh))
 
 
-def shard_batch(mesh: Mesh, batch: Any) -> Any:
-    """Device-put a pytree of arrays with dim-0 sharded over data axes."""
+def microbatch_pspec(mesh: Mesh) -> P:
+    """Spec for stacked ``[K, B/K, ...]`` leaves: K replicated, B/K
+    sharded over the data axes."""
+    return P(None, data_axes(mesh))
+
+
+def stack_microbatches(batch: Any, accum_steps: int) -> Any:
+    """Reshape every ``[B, ...]`` leaf to ``[K, B/K, ...]``.
+
+    The accumulating train step scans dim 0 (K microbatches) and sees
+    dim 1 as its per-pass batch. Because this is a pure reshape of one
+    global batch, K×(B/K) accumulation consumes *exactly* the same
+    samples as a single B-sized pass — the basis of the parity tests.
+    """
+    if accum_steps < 1:
+        raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
+
+    def split(x):
+        b = x.shape[0]
+        if b % accum_steps:
+            raise ValueError(
+                f"global batch {b} not divisible by accum_steps="
+                f"{accum_steps}")
+        return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def shard_batch(mesh: Mesh, batch: Any, *, batch_dim: int = 0) -> Any:
+    """Device-put a pytree of arrays with ``batch_dim`` sharded over the
+    data axes (``batch_dim=1`` for stacked microbatch leaves)."""
     def place(x):
-        spec = P(data_axes(mesh), *([None] * (x.ndim - 1)))
-        return jax.device_put(x, NamedSharding(mesh, spec))
+        dims = [None] * x.ndim
+        dims[batch_dim] = data_axes(mesh)
+        return jax.device_put(x, NamedSharding(mesh, P(*dims)))
     return jax.tree_util.tree_map(place, batch)
 
 
-def sharded_iterator(mesh: Mesh, host_iter: Iterator) -> Iterator:
+def sharded_iterator(mesh: Mesh, host_iter: Iterator, *,
+                     batch_dim: int = 0) -> Iterator:
     for batch in host_iter:
-        yield shard_batch(mesh, batch)
+        yield shard_batch(mesh, batch, batch_dim=batch_dim)
+
+
+def microbatched_iterator(host_iter: Iterator, accum_steps: int) -> Iterator:
+    """Wrap a global-batch stream into stacked microbatch pytrees."""
+    for batch in host_iter:
+        yield stack_microbatches(batch, accum_steps)

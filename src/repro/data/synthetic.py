@@ -96,11 +96,65 @@ def lm_batch(key, batch_size: int, seq_len: int, vocab: int
     return tokens, labels
 
 
+def _maybe_microbatched(stream: Iterator, accum_steps: int) -> Iterator:
+    """Stack a global-batch stream to ``[K, B/K, ...]`` when K>1.
+
+    All accumulation-aware iterators route through
+    ``pipeline.microbatched_iterator`` so the stacking semantics live in
+    exactly one place.
+    """
+    if accum_steps == 1:
+        return stream
+    from repro.data.pipeline import microbatched_iterator
+    return microbatched_iterator(stream, accum_steps)
+
+
 def batch_iterator(data: ClassificationData, batch_size: int,
-                   seed: int = 0) -> Iterator[tuple]:
-    """Infinite host-side iterator (deterministic, resumable by index)."""
-    i = 0
-    while True:
-        yield data.batch(jax.random.fold_in(jax.random.PRNGKey(seed), i),
-                         batch_size)
-        i += 1
+                   seed: int = 0, *, accum_steps: int = 1
+                   ) -> Iterator[tuple]:
+    """Infinite host-side iterator (deterministic, resumable by index).
+
+    ``batch_size`` is the **global** batch per optimizer step;
+    ``accum_steps=K>1`` yields the same samples stacked as
+    ``[K, batch_size/K, ...]`` for the accumulating train step.
+    """
+    def gen():
+        i = 0
+        while True:
+            yield data.batch(
+                jax.random.fold_in(jax.random.PRNGKey(seed), i), batch_size)
+            i += 1
+
+    return _maybe_microbatched(gen(), accum_steps)
+
+
+def two_view_iterator(data: ClassificationData, batch_size: int,
+                      seed: int = 0, *, accum_steps: int = 1
+                      ) -> Iterator[tuple]:
+    """Infinite (view1, view2) SSL stream; global ``batch_size`` per
+    step, optionally stacked ``[K, B/K, ...]`` for accumulation."""
+    def gen():
+        i = 0
+        while True:
+            yield two_view_batch(
+                data, jax.random.fold_in(jax.random.PRNGKey(seed + 1), i),
+                batch_size)
+            i += 1
+
+    return _maybe_microbatched(gen(), accum_steps)
+
+
+def lm_iterator(batch_size: int, seq_len: int, vocab: int, seed: int = 0,
+                *, accum_steps: int = 1) -> Iterator[dict]:
+    """Infinite LM dict stream (``{"tokens", "labels"}``); global
+    ``batch_size`` per step, optionally stacked for accumulation."""
+    def gen():
+        i = 0
+        while True:
+            toks, labels = lm_batch(
+                jax.random.fold_in(jax.random.PRNGKey(seed), i),
+                batch_size, seq_len, vocab)
+            yield {"tokens": toks, "labels": labels}
+            i += 1
+
+    return _maybe_microbatched(gen(), accum_steps)

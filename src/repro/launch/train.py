@@ -5,9 +5,17 @@ with the production rules, and runs the jit'd train_step on synthetic LM
 data. On this CPU container it runs with a (1,1) mesh (the same code
 path scales to the pod meshes — proven by the dry-run).
 
+Large-batch execution: ``--global-batch`` is the total samples per
+optimizer step and ``--microbatch`` the per-device-pass batch; when they
+differ the step scan-accumulates K = global/micro microbatches in f32
+and applies the optimizer once per global step (two ``pallas_call``s
+under ``use_kernel="fused"``, regardless of K). The optimizer/schedule
+are built from the *global* batch size — that is what the paper's
+batch-size LR scaling (§5.2.2) and TVLARS's γ_min (§5.2.1) key off.
+
 Usage:
   python -m repro.launch.train --arch qwen2.5-3b --smoke \
-      --optimizer tvlars --steps 20 --batch 8 --seq 128
+      --optimizer tvlars --steps 20 --global-batch 8 --microbatch 2
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core import build_optimizer
+from repro.data import pipeline
 from repro.data.synthetic import lm_batch
 from repro.launch import sharding
 from repro.launch.mesh import make_host_mesh
@@ -37,12 +46,31 @@ def main() -> None:
     ap.add_argument("--optimizer", default="tvlars")
     ap.add_argument("--learning-rate", type=float, default=2.0)
     ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="alias for --global-batch (kept for back-compat)")
+    ap.add_argument("--global-batch", type=int, default=None,
+                    help="total samples per optimizer step "
+                         "(default: --batch)")
+    ap.add_argument("--microbatch", type=int, default=None,
+                    help="per-device-pass batch; K = global/micro grads "
+                         "are accumulated (default: --global-batch)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
+
+    global_batch = args.global_batch if args.global_batch is not None \
+        else args.batch
+    microbatch = args.microbatch if args.microbatch is not None \
+        else global_batch
+    if global_batch < 1 or microbatch < 1:
+        raise SystemExit(f"--global-batch {global_batch} and --microbatch "
+                         f"{microbatch} must be >= 1")
+    if global_batch % microbatch:
+        raise SystemExit(f"--global-batch {global_batch} must be divisible "
+                         f"by --microbatch {microbatch}")
+    accum_steps = global_batch // microbatch
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "ssm" or cfg.family == "hybrid":
@@ -51,36 +79,48 @@ def main() -> None:
     model = get_model(cfg)
     mesh = make_host_mesh(args.data_parallel, args.model_parallel)
 
+    # schedules/γ_min see the TRUE global batch (samples per optimizer
+    # step), not a token-count heuristic
     opt = build_optimizer(args.optimizer, total_steps=args.steps,
                           learning_rate=args.learning_rate,
-                          batch_size=args.batch * args.seq // 128)
+                          batch_size=global_batch)
     rng = jax.random.PRNGKey(0)
 
     with mesh:
         if mesh.size > 1:
             layers_lib.set_batch_sharding(
-                ("data",) if args.batch % args.data_parallel == 0 else None,
+                ("data",) if microbatch % args.data_parallel == 0 else None,
                 model_size=args.model_parallel, mesh=mesh)
         state = TrainState.create(model.init(rng), opt)
         state_sh = sharding.named(
             mesh, sharding.state_pspecs(
                 mesh, jax.eval_shape(lambda: state), fsdp=True))
         state = jax.device_put(state, state_sh)
-        step_fn = jax.jit(make_train_step(model, opt),
+        step_fn = jax.jit(make_train_step(model, opt,
+                                          accum_steps=accum_steps),
                           in_shardings=(state_sh, None),
                           donate_argnums=(0,))
 
-        es = extra_embed_shape(cfg, args.batch)
+        es = extra_embed_shape(cfg, global_batch)
+        batch_dim = 1 if accum_steps > 1 else 0
+        print(f"global_batch={global_batch} microbatch={microbatch} "
+              f"accum_steps={accum_steps} mesh={tuple(mesh.shape.items())}")
         t0 = time.time()
         for i in range(args.steps):
-            toks, labels = lm_batch(jax.random.fold_in(rng, i), args.batch,
+            toks, labels = lm_batch(jax.random.fold_in(rng, i), global_batch,
                                     args.seq, cfg.vocab_size)
             batch = {"tokens": toks, "labels": labels}
             if es is not None:
                 batch["extra_embeds"] = jnp.zeros(es, cfg.cdtype)
+            if accum_steps > 1:
+                batch = pipeline.stack_microbatches(batch, accum_steps)
+            if mesh.size > 1:
+                batch = pipeline.shard_batch(mesh, batch,
+                                             batch_dim=batch_dim)
             state, metrics = step_fn(state, batch)
             if i % args.log_every == 0 or i == args.steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
+                m = {k: float(metrics[k])
+                     for k in ("loss", "ce", "grad_norm")}
                 print(f"step {i:4d} loss={m['loss']:.4f} "
                       f"ce={m['ce']:.4f} gnorm={m['grad_norm']:.3f} "
                       f"({time.time()-t0:.1f}s)")

@@ -1,1 +1,12 @@
-"""repro.training"""
+"""repro.training — tasks, unified train step, accumulation, fit loop."""
+from repro.training.losses import WeightedMean
+from repro.training.tasks import Task, classifier_task, lm_task, ssl_task
+from repro.training.train_state import TrainState
+from repro.training.trainer import (fit, make_classifier_step,
+                                    make_ssl_step, make_train_step)
+
+__all__ = [
+    "Task", "TrainState", "WeightedMean", "classifier_task", "fit",
+    "lm_task", "make_classifier_step", "make_ssl_step", "make_train_step",
+    "ssl_task",
+]

@@ -3,11 +3,43 @@
 The problem statement Eq. (1) is CE + (λ/2)‖w‖²; weight decay is applied
 inside the optimizers (Eq. 2's wd term), so losses here are pure data
 terms.
+
+Every loss here is **mean-reduced** over the batch. The accumulation
+engine relies on that: :class:`WeightedMean` folds K per-microbatch
+means (each weighted by its sample count) into the global-batch mean,
+so K microbatches of B/K samples reproduce the 1×B statistics exactly
+for mean-reduced quantities.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
+
+
+class WeightedMean(NamedTuple):
+    """Running weighted mean ``total/weight`` in f32 (scan-carry safe).
+
+    ``total`` = Σ wᵢ·vᵢ, ``weight`` = Σ wᵢ. For K equal-weight
+    microbatch means this finalizes to the plain mean of means ≡ the
+    global-batch mean; unequal microbatches stay correct because each
+    contributes proportionally to its sample count.
+    """
+    total: jnp.ndarray
+    weight: jnp.ndarray
+
+    @classmethod
+    def zero(cls) -> "WeightedMean":
+        return cls(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+    def add(self, value, weight=1.0) -> "WeightedMean":
+        w = jnp.asarray(weight, jnp.float32)
+        return WeightedMean(self.total + w * jnp.asarray(value, jnp.float32),
+                            self.weight + w)
+
+    def result(self) -> jnp.ndarray:
+        return self.total / jnp.maximum(self.weight, 1e-12)
 
 
 def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,76 @@
+"""Task abstraction — one loss/metrics contract for every workload.
+
+A :class:`Task` is the unit the unified training step consumes: a name
+plus ``loss_fn(params, batch) -> (loss, metrics)`` where ``loss`` is a
+scalar and ``metrics`` is a (possibly empty) dict of scalar diagnostics.
+Both are **mean-reduced over the batch**: that contract is what makes
+gradient accumulation exact — K equal-size microbatches of B/K samples
+average to the same loss/grads as one batch of B samples (see
+``losses.WeightedMean`` for the accumulation arithmetic).
+
+``batch`` is an arbitrary pytree: a dict for LM workloads
+(``{"tokens", "labels", ...}``), a ``(images, labels)`` tuple for
+classification, a ``(view1, view2)`` tuple for SSL. The step factory
+never inspects it — only the task does.
+
+Caveat for batch-statistics losses (Barlow Twins; MoE load-balance):
+these are not linear in per-sample terms, so under accumulation the
+*objective* becomes the mean of per-microbatch losses — the standard
+large-batch definition; parity with a single B-sized pass holds exactly
+when microbatches share routing/correlation statistics (e.g. the tiled
+batches used in the parity tests) and approximately otherwise.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+from repro.training import losses
+
+
+class Task(NamedTuple):
+    """name + ``loss_fn(params, batch) -> (scalar loss, metrics dict)``."""
+    name: str
+    loss_fn: Callable
+
+
+def lm_task(model, *, lb_coef: float = 1e-2, z_coef: float = 1e-3) -> Task:
+    """Next-token LM: fused chunked CE + MoE aux losses.
+
+    ``batch``: ``{"tokens": [B,S], "labels": [B,S], ...}``.
+    """
+
+    def loss_fn(params, batch):
+        # fused chunked CE head — full [B,S,V] logits never materialise
+        ce, aux = model.loss(params, batch)
+        loss = ce + lb_coef * aux.load_balance_loss \
+            + z_coef * aux.router_z_loss
+        return loss, {"ce": ce, "load_balance": aux.load_balance_loss}
+
+    return Task("lm", loss_fn)
+
+
+def classifier_task(apply_fn: Callable) -> Task:
+    """Image classification: CE + accuracy. ``batch``: (images, labels)."""
+
+    def loss_fn(params, batch):
+        images, labels = batch
+        logits = apply_fn(params, images)
+        return losses.cross_entropy(logits, labels), \
+            {"accuracy": losses.accuracy(logits, labels)}
+
+    return Task("classifier", loss_fn)
+
+
+def ssl_task(embed_fn: Callable, *, lambda_offdiag: float = 5e-3) -> Task:
+    """Barlow Twins: embed_fn(params, images) -> [B,D].
+
+    ``batch``: (view1, view2).
+    """
+
+    def loss_fn(params, batch):
+        v1, v2 = batch
+        z1 = embed_fn(params, v1)
+        z2 = embed_fn(params, v2)
+        return losses.barlow_twins_loss(z1, z2, lambda_offdiag), {}
+
+    return Task("ssl", loss_fn)

@@ -1,16 +1,31 @@
-"""Training-step factories + host-side fit loop.
+"""Unified training step + gradient-accumulation engine + host fit loop.
 
-``make_train_step(model, optimizer)`` returns the pure function
-``(state, batch) -> (state, metrics)`` used everywhere: jit'd directly
-for CPU experiments, or pjit'd with shardings by the launcher — the
-function body is identical (GSPMD handles distribution).
+``make_train_step(task, optimizer, accum_steps=K)`` returns the pure
+function ``(state, batch) -> (state, metrics)`` used everywhere: jit'd
+directly for CPU experiments, or pjit'd with shardings by the launcher —
+the function body is identical (GSPMD handles distribution).
+
+``task`` is a :class:`repro.training.tasks.Task` (LM / classifier / SSL
+all share one step body); passing a :class:`repro.models.registry.Model`
+is accepted as shorthand for ``tasks.lm_task(model)``.
+
+Gradient accumulation (``accum_steps=K > 1``) decouples the global batch
+from device memory: ``batch`` leaves carry a leading ``[K, B/K, ...]``
+microbatch axis (see ``data.pipeline.stack_microbatches``) and a
+``jax.lax.scan`` over K accumulates grads — and the task's mean-reduced
+loss/metrics — in f32 at fixed peak memory (one microbatch of
+activations + one f32 grad buffer), then applies the optimizer exactly
+once per global step. Under ``use_kernel="fused"`` that single
+application is still exactly two ``pallas_call``s regardless of K.
 
 Metrics include mean LWN/LGN/LNR so the paper's Fig. 2 telemetry is free
-at every step; ``fit`` optionally records the full per-layer traces.
+at every step; with accumulation those norms are computed on the
+*accumulated* (global-batch) gradients, so the traces reflect the true
+global batch. ``fit`` optionally records the full per-layer traces.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -18,32 +33,103 @@ import jax.numpy as jnp
 from repro.core import apply_updates, instrumentation
 from repro.core.base import GradientTransform
 from repro.models.registry import Model
-from repro.training import losses
+from repro.training import tasks
+from repro.training.losses import WeightedMean
 from repro.training.train_state import TrainState
 
 
-def make_train_step(model: Model, optimizer: GradientTransform, *,
+def _accumulate(grad_fn: Callable, params, batch, accum_steps: int):
+    """Scan K microbatches: f32 grad sum + weighted-mean loss/metrics.
+
+    ``batch`` leaves are ``[K, B/K, ...]``; peak memory is one
+    microbatch of activations plus one f32 grad accumulator, independent
+    of K (and therefore of the global batch size).
+    """
+    for leaf in jax.tree_util.tree_leaves(batch):
+        if leaf.shape[:1] != (accum_steps,):
+            raise ValueError(
+                f"accum_steps={accum_steps} but a batch leaf has leading "
+                f"dim {leaf.shape[:1]} (shape {leaf.shape}); stack "
+                f"microbatches as [K, B/K, ...] — see "
+                f"data.pipeline.stack_microbatches")
+
+    # shapes only — establishes the metrics-dict structure for the carry
+    mb0 = jax.tree_util.tree_map(lambda x: x[0], batch)
+    (_, metrics_shape), _ = jax.eval_shape(grad_fn, params, mb0)
+
+    def body(carry, microbatch):
+        grad_acc, loss_acc, metric_acc = carry
+        (loss, metrics), grads = grad_fn(params, microbatch)
+        grad_acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+        loss_acc = loss_acc.add(loss)
+        metric_acc = jax.tree_util.tree_map(
+            lambda a, v: a.add(v), metric_acc, metrics,
+            is_leaf=lambda x: isinstance(x, WeightedMean))
+        return (grad_acc, loss_acc, metric_acc), None
+
+    carry0 = (
+        jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        WeightedMean.zero(),
+        # metric accumulators take the metric's own shape (metrics need
+        # not be scalars — e.g. per-class error vectors)
+        jax.tree_util.tree_map(
+            lambda s: WeightedMean(jnp.zeros(s.shape, jnp.float32),
+                                   jnp.zeros((), jnp.float32)),
+            metrics_shape),
+    )
+    (grad_sum, loss_acc, metric_acc), _ = jax.lax.scan(body, carry0, batch)
+    grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grad_sum)
+    metrics = jax.tree_util.tree_map(
+        lambda a: a.result(), metric_acc,
+        is_leaf=lambda x: isinstance(x, WeightedMean))
+    return loss_acc.result(), metrics, grads
+
+
+def make_train_step(task: Union[tasks.Task, Model],
+                    optimizer: GradientTransform, *,
+                    accum_steps: int = 1,
                     lb_coef: float = 1e-2, z_coef: float = 1e-3,
                     record_norms: bool = False) -> Callable:
-    """LM training step: CE over next-token labels + MoE aux losses."""
+    """The one step factory: ``(state, batch) -> (state, metrics)``.
 
-    def loss_fn(params, batch):
-        # fused chunked CE head — full [B,S,V] logits never materialise
-        ce, aux = model.loss(params, batch)
-        loss = ce + lb_coef * aux.load_balance_loss \
-            + z_coef * aux.router_z_loss
-        return loss, (ce, aux)
+    ``task``: a :class:`~repro.training.tasks.Task`; a ``Model`` is
+    wrapped via ``tasks.lm_task(model, lb_coef=..., z_coef=...)`` for
+    backward compatibility with the LM call sites.
+    ``accum_steps=K>1``: batch leaves are ``[K, B/K, ...]`` stacked
+    microbatches; grads/metrics accumulate in f32 over a scan and the
+    optimizer applies once per global step.
 
-    def train_step(state: TrainState, batch: dict):
-        (loss, (ce, aux)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(state.params, batch)
+    The returned step also accepts the batch splatted as positional args
+    (``step(state, images, labels)``), matching the legacy per-workload
+    factories' signatures.
+    """
+    if isinstance(task, Model):
+        task = tasks.lm_task(task, lb_coef=lb_coef, z_coef=z_coef)
+    if accum_steps < 1:
+        raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
+    grad_fn = jax.value_and_grad(task.loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, *batch_args):
+        batch = batch_args[0] if len(batch_args) == 1 else batch_args
+        if accum_steps == 1:
+            (loss, task_metrics), grads = grad_fn(state.params, batch)
+        else:
+            loss, task_metrics, grads = _accumulate(
+                grad_fn, state.params, batch, accum_steps)
+        clash = {"loss", "grad_norm", "layer_norms"} & set(task_metrics)
+        if clash:
+            raise ValueError(
+                f"task {task.name!r} metrics {sorted(clash)} collide with "
+                f"trainer-reserved metric names")
         updates, opt_state = optimizer.update(grads, state.opt_state,
                                               state.params)
         params = apply_updates(state.params, updates)
-        metrics = {"loss": loss, "ce": ce,
-                   "load_balance": aux.load_balance_loss,
-                   "grad_norm": _global_norm(grads)}
+        metrics = {"loss": loss, **task_metrics,
+                   "grad_norm": instrumentation.global_norm(grads)}
         if record_norms:
+            # on the accumulated grads: Fig. 2 traces see the global batch
             metrics["layer_norms"] = instrumentation.layer_norms(
                 state.params, grads)
         return TrainState(state.step + 1, params, opt_state), metrics
@@ -53,65 +139,34 @@ def make_train_step(model: Model, optimizer: GradientTransform, *,
 
 def make_classifier_step(apply_fn: Callable,
                          optimizer: GradientTransform, *,
+                         accum_steps: int = 1,
                          record_norms: bool = False) -> Callable:
-    """Image-classifier step (paper-faithful CIFAR-analogue runs)."""
-
-    def loss_fn(params, images, labels):
-        logits = apply_fn(params, images)
-        return losses.cross_entropy(logits, labels), logits
-
-    def train_step(state: TrainState, images, labels):
-        (loss, logits), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(state.params, images, labels)
-        updates, opt_state = optimizer.update(grads, state.opt_state,
-                                              state.params)
-        params = apply_updates(state.params, updates)
-        metrics = {"loss": loss,
-                   "accuracy": losses.accuracy(logits, labels),
-                   "grad_norm": _global_norm(grads)}
-        if record_norms:
-            metrics["layer_norms"] = instrumentation.layer_norms(
-                state.params, grads)
-        return TrainState(state.step + 1, params, opt_state), metrics
-
-    return train_step
+    """Back-compat shim: ``make_train_step(tasks.classifier_task(...))``."""
+    return make_train_step(tasks.classifier_task(apply_fn), optimizer,
+                           accum_steps=accum_steps,
+                           record_norms=record_norms)
 
 
 def make_ssl_step(embed_fn: Callable, optimizer: GradientTransform, *,
                   lambda_offdiag: float = 5e-3,
+                  accum_steps: int = 1,
                   record_norms: bool = False) -> Callable:
-    """Barlow-Twins step: embed_fn(params, images) -> projections [B,D]."""
-
-    def loss_fn(params, v1, v2):
-        z1 = embed_fn(params, v1)
-        z2 = embed_fn(params, v2)
-        return losses.barlow_twins_loss(z1, z2, lambda_offdiag)
-
-    def train_step(state: TrainState, v1, v2):
-        loss, grads = jax.value_and_grad(loss_fn)(state.params, v1, v2)
-        updates, opt_state = optimizer.update(grads, state.opt_state,
-                                              state.params)
-        params = apply_updates(state.params, updates)
-        metrics = {"loss": loss, "grad_norm": _global_norm(grads)}
-        if record_norms:
-            metrics["layer_norms"] = instrumentation.layer_norms(
-                state.params, grads)
-        return TrainState(state.step + 1, params, opt_state), metrics
-
-    return train_step
-
-
-def _global_norm(tree) -> jnp.ndarray:
-    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                        for x in jax.tree_util.tree_leaves(tree)))
+    """Back-compat shim: ``make_train_step(tasks.ssl_task(...))``."""
+    return make_train_step(
+        tasks.ssl_task(embed_fn, lambda_offdiag=lambda_offdiag), optimizer,
+        accum_steps=accum_steps, record_norms=record_norms)
 
 
 def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
         *, recorder: Optional[instrumentation.NormRecorder] = None,
         log_every: int = 0, log_fn: Callable = print,
         donate: Optional[bool] = None) -> tuple[TrainState, list[dict]]:
-    """Host loop used by CPU-scale experiments. ``batches`` yields either
-    dict batches (LM) or tuples (classifier/SSL args).
+    """Host loop used by CPU-scale experiments. ``batches`` yields one
+    pytree per *global* step: dict batches (LM) or tuples
+    (classifier/SSL args); for an accumulating step the leaves carry the
+    stacked ``[K, B/K, ...]`` microbatch axis (see
+    ``data.pipeline.stack_microbatches`` / the iterators'
+    ``accum_steps=`` knob).
 
     ``donate`` donates the TrainState argument to the jitted step so
     params and optimizer buffers update in place — this is what makes
@@ -132,9 +187,13 @@ def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
         ln = metrics.pop("layer_norms", None)
         if recorder is not None and ln is not None:
             recorder.record(i, ln)
-        host = {k: float(v) for k, v in metrics.items()}
+        # scalars -> python floats; non-scalar task metrics (e.g.
+        # per-class vectors) come back as host numpy arrays
+        host = {k: float(v) if jnp.ndim(v) == 0 else jax.device_get(v)
+                for k, v in metrics.items()}
         history.append(host)
         if log_every and (i % log_every == 0 or i == num_steps - 1):
             log_fn(f"step {i:5d} " + " ".join(
-                f"{k}={v:.4f}" for k, v in host.items()))
+                f"{k}={v:.4f}" for k, v in host.items()
+                if isinstance(v, float)))
     return state, history

@@ -1,0 +1,276 @@
+"""Gradient-accumulation parity: K microbatches of B/K ≡ one batch of B.
+
+The engine contract (``trainer._accumulate``): scanning K stacked
+microbatches accumulates grads and mean-reduced metrics in f32, then the
+optimizer applies exactly once per global step — so for mean-decomposable
+losses (CE: classifier + dense LM) a pure reshape of the same global
+batch must give identical updates to ≤1e-6. Batch-statistics losses
+(Barlow Twins correlations, MoE load-balance) are not linear in
+per-sample terms, so their 1×B parity cases use *tiled* global batches
+(K copies of one microbatch), for which the statistics coincide exactly;
+engine-level parity (scan vs an explicit python loop over distinct
+microbatches) covers them in the general case.
+
+Also asserted: the fused substrate still issues exactly 2
+``pallas_call``s per *global* step regardless of K.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import apply_updates, build_optimizer
+from repro.data.pipeline import stack_microbatches
+from repro.data.synthetic import (ClassificationData, lm_batch,
+                                  lm_iterator, two_view_batch,
+                                  two_view_iterator)
+from repro.kernels.ops import count_pallas_calls
+from repro.models import get_model
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+from repro.training import classifier_task, lm_task, ssl_task
+from repro.training.losses import WeightedMean
+from repro.training.train_state import TrainState
+from repro.training.trainer import make_train_step
+
+ATOL = 1e-6
+
+
+def _assert_states_close(s1, s2, atol=ATOL):
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=atol)
+
+
+def _clf_setup():
+    data = ClassificationData(num_classes=4, image_size=8, seed=0)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                                 num_classes=4, hidden=32)
+    opt = build_optimizer("wa-lars", total_steps=10, learning_rate=0.3)
+    return data, params, opt
+
+
+def test_classifier_parity_distinct_microbatches():
+    data, params, opt = _clf_setup()
+    state = TrainState.create(params, opt)
+    batch = data.batch(jax.random.PRNGKey(1), 64)
+    task = classifier_task(apply_mlp_classifier)
+    s1, m1 = jax.jit(make_train_step(task, opt))(state, *batch)
+    sK, mK = jax.jit(make_train_step(task, opt, accum_steps=4))(
+        state, *stack_microbatches(batch, 4))
+    _assert_states_close(s1, sK)
+    for k in ("loss", "accuracy", "grad_norm"):
+        np.testing.assert_allclose(float(m1[k]), float(mK[k]), atol=1e-5)
+
+
+def test_dense_lm_parity_distinct_microbatches():
+    cfg = ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64, remat=False)
+    m = get_model(cfg)
+    opt = build_optimizer("tvlars", total_steps=10, learning_rate=1.0)
+    state = TrainState.create(m.init(jax.random.PRNGKey(0)), opt)
+    toks, labels = lm_batch(jax.random.PRNGKey(1), 8, 16, 64)
+    batch = {"tokens": toks, "labels": labels}
+    s1, m1 = jax.jit(make_train_step(m, opt))(state, batch)
+    sK, mK = jax.jit(make_train_step(m, opt, accum_steps=4))(
+        state, stack_microbatches(batch, 4))
+    _assert_states_close(s1, sK)
+    np.testing.assert_allclose(float(m1["ce"]), float(mK["ce"]), atol=1e-5)
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(mK["grad_norm"]), atol=1e-5)
+
+
+def test_moe_lm_parity_tiled_microbatches():
+    """MoE aux losses are batch statistics: parity vs 1×B holds exactly
+    on a tiled batch (identical per-row routing in every copy)."""
+    cfg = ModelConfig(family="moe", num_layers=2, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64,
+                      num_experts=4, experts_per_token=2, remat=False)
+    m = get_model(cfg)
+    opt = build_optimizer("wa-lars", total_steps=10, learning_rate=0.5)
+    state = TrainState.create(m.init(jax.random.PRNGKey(0)), opt)
+    toks, labels = lm_batch(jax.random.PRNGKey(1), 2, 16, 64)
+    full = {"tokens": jnp.tile(toks, (4, 1)),
+            "labels": jnp.tile(labels, (4, 1))}
+    s1, m1 = jax.jit(make_train_step(m, opt))(state, full)
+    sK, mK = jax.jit(make_train_step(m, opt, accum_steps=4))(
+        state, stack_microbatches(full, 4))
+    _assert_states_close(s1, sK)
+    assert float(m1["load_balance"]) > 0.0
+    np.testing.assert_allclose(float(m1["load_balance"]),
+                               float(mK["load_balance"]), atol=1e-5)
+
+
+def test_ssl_parity_tiled_microbatches():
+    """Barlow Twins correlations over K tiled copies equal the
+    single-microbatch correlations — exact 1×B parity case."""
+    data, params, opt = _clf_setup()
+    v1, v2 = two_view_batch(data, jax.random.PRNGKey(2), 8)
+    full = (jnp.tile(v1, (4, 1, 1, 1)), jnp.tile(v2, (4, 1, 1, 1)))
+    state = TrainState.create(params, opt)
+    task = ssl_task(apply_mlp_classifier)
+    s1, m1 = jax.jit(make_train_step(task, opt))(state, *full)
+    sK, mK = jax.jit(make_train_step(task, opt, accum_steps=4))(
+        state, *stack_microbatches(full, 4))
+    _assert_states_close(s1, sK)
+    np.testing.assert_allclose(float(m1["loss"]), float(mK["loss"]),
+                               rtol=1e-5)
+
+
+def test_ssl_scan_matches_python_loop():
+    """Engine-level parity for a non-decomposable loss with genuinely
+    distinct microbatches: the scan must equal an explicit loop that
+    averages per-microbatch grads in f32 and applies the optimizer
+    once."""
+    data, params, opt = _clf_setup()
+    task = ssl_task(apply_mlp_classifier)
+    state = TrainState.create(params, opt)
+    k = 4
+    v1, v2 = two_view_batch(data, jax.random.PRNGKey(3), 8 * k)
+    stacked = stack_microbatches((v1, v2), k)
+
+    grad_fn = jax.jit(jax.value_and_grad(task.loss_fn, has_aux=True))
+    acc = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    for j in range(k):
+        mb = jax.tree_util.tree_map(lambda x: x[j], stacked)
+        _, g = grad_fn(params, mb)
+        acc = jax.tree_util.tree_map(
+            lambda a, x: a + x.astype(jnp.float32), acc, g)
+    mean_grads = jax.tree_util.tree_map(lambda g: g / k, acc)
+    updates, _ = opt.update(mean_grads, state.opt_state, state.params)
+    manual_params = apply_updates(state.params, updates)
+
+    sK, _ = jax.jit(make_train_step(task, opt, accum_steps=k))(
+        state, *stacked)
+    for a, b in zip(jax.tree_util.tree_leaves(manual_params),
+                    jax.tree_util.tree_leaves(sK.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
+
+
+@pytest.mark.parametrize("accum_steps", [1, 4])
+def test_fused_path_two_pallas_calls_per_global_step(accum_steps):
+    """The launch-collapse invariant survives accumulation: one fused
+    optimizer application = exactly 2 pallas_calls per GLOBAL step, no
+    matter how many microbatches were scanned."""
+    data, params, _ = _clf_setup()
+    opt = build_optimizer("wa-lars", total_steps=10, learning_rate=0.3,
+                          use_kernel="fused")
+    state = TrainState.create(params, opt)
+    batch = data.batch(jax.random.PRNGKey(1), 8 * accum_steps)
+    if accum_steps > 1:
+        batch = stack_microbatches(batch, accum_steps)
+    step = make_train_step(classifier_task(apply_mlp_classifier), opt,
+                           accum_steps=accum_steps)
+    jaxpr = jax.make_jaxpr(step)(state, *batch)
+    assert count_pallas_calls(jaxpr.jaxpr) == 2
+
+
+def test_record_norms_on_accumulated_grads():
+    """LWN/LGN/LNR telemetry must see the global-batch grads: with a
+    tiled batch the accumulated LGN equals the single-pass LGN."""
+    data, params, opt = _clf_setup()
+    state = TrainState.create(params, opt)
+    images, labels = data.batch(jax.random.PRNGKey(1), 8)
+    full = (jnp.tile(images, (4, 1, 1, 1)), jnp.tile(labels, (4,)))
+    task = classifier_task(apply_mlp_classifier)
+    _, m1 = jax.jit(make_train_step(task, opt, record_norms=True))(
+        state, *full)
+    _, mK = jax.jit(make_train_step(task, opt, accum_steps=4,
+                                    record_norms=True))(
+        state, *stack_microbatches(full, 4))
+    np.testing.assert_allclose(np.asarray(m1["layer_norms"].lgn),
+                               np.asarray(mK["layer_norms"].lgn),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1["layer_norms"].lwn),
+                               np.asarray(mK["layer_norms"].lwn),
+                               rtol=1e-6)
+
+
+def test_stack_microbatches_validation():
+    with pytest.raises(ValueError, match="not divisible"):
+        stack_microbatches(jnp.zeros((7, 3)), 2)
+    with pytest.raises(ValueError, match=">= 1"):
+        stack_microbatches(jnp.zeros((8, 3)), 0)
+    out = stack_microbatches({"x": jnp.zeros((8, 3))}, 4)
+    assert out["x"].shape == (4, 2, 3)
+
+
+def test_accumulating_step_rejects_unstacked_batch():
+    data, params, opt = _clf_setup()
+    state = TrainState.create(params, opt)
+    batch = data.batch(jax.random.PRNGKey(0), 8)
+    step = make_train_step(classifier_task(apply_mlp_classifier), opt,
+                           accum_steps=3)
+    with pytest.raises(ValueError, match="accum_steps=3"):
+        step(state, *batch)
+    with pytest.raises(ValueError, match="accum_steps must be >= 1"):
+        make_train_step(classifier_task(apply_mlp_classifier), opt,
+                        accum_steps=0)
+
+
+def test_accumulation_supports_vector_metrics():
+    """Metric accumulators must take the metric's own shape, not assume
+    scalars (e.g. per-class error vectors)."""
+    from repro.training import Task
+    data, params, opt = _clf_setup()
+    state = TrainState.create(params, opt)
+    base = classifier_task(apply_mlp_classifier)
+
+    def loss_fn(p, batch):
+        loss, metrics = base.loss_fn(p, batch)
+        _, labels = batch
+        onehot = jax.nn.one_hot(labels, 4)
+        metrics["class_frac"] = jnp.mean(onehot, axis=0)   # [4]
+        return loss, metrics
+
+    batch = data.batch(jax.random.PRNGKey(1), 64)
+    task = Task("clf+vec", loss_fn)
+    _, m1 = jax.jit(make_train_step(task, opt))(state, *batch)
+    _, mK = jax.jit(make_train_step(task, opt, accum_steps=4))(
+        state, *stack_microbatches(batch, 4))
+    assert mK["class_frac"].shape == (4,)
+    np.testing.assert_allclose(np.asarray(m1["class_frac"]),
+                               np.asarray(mK["class_frac"]), atol=1e-6)
+
+    # and the host fit loop must carry the vector metric through
+    from repro.data.synthetic import batch_iterator
+    from repro.training import fit
+    _, hist = fit(make_train_step(task, opt, accum_steps=4), state,
+                  batch_iterator(data, 64, accum_steps=4), 2)
+    assert hist[-1]["class_frac"].shape == (4,)
+    assert isinstance(hist[-1]["loss"], float)
+
+
+def test_reserved_metric_names_rejected():
+    from repro.training import Task
+    data, params, opt = _clf_setup()
+    state = TrainState.create(params, opt)
+    task = Task("bad", lambda p, b: (
+        jnp.zeros(()), {"loss": jnp.zeros(())}))
+    step = make_train_step(task, opt)
+    with pytest.raises(ValueError, match="reserved"):
+        step(state, data.batch(jax.random.PRNGKey(0), 8))
+
+
+def test_weighted_mean_equal_and_unequal_weights():
+    acc = WeightedMean.zero().add(2.0).add(4.0)
+    np.testing.assert_allclose(float(acc.result()), 3.0)
+    # unequal microbatch sizes weight proportionally
+    acc = WeightedMean.zero().add(2.0, weight=3.0).add(6.0, weight=1.0)
+    np.testing.assert_allclose(float(acc.result()), 3.0)
+
+
+def test_microbatched_iterators_shapes():
+    data = ClassificationData(num_classes=4, image_size=8, seed=0)
+    from repro.data.synthetic import batch_iterator
+    x, y = next(batch_iterator(data, 8, accum_steps=4))
+    assert x.shape[:2] == (4, 2) and y.shape == (4, 2)
+    v1, v2 = next(two_view_iterator(data, 8, accum_steps=2))
+    assert v1.shape[:2] == (2, 4) and v2.shape[:2] == (2, 4)
+    b = next(lm_iterator(8, 16, 64, accum_steps=4))
+    assert b["tokens"].shape == (4, 2, 16)
+    assert b["labels"].shape == (4, 2, 16)
+    flat = next(lm_iterator(8, 16, 64))
+    assert flat["tokens"].shape == (8, 16)

@@ -140,6 +140,51 @@ def test_checkpoint_shape_mismatch_raises():
             restore(path, {"a": jnp.ones((3, 3))})
 
 
+def test_checkpoint_dtype_mismatch_raises():
+    """A dtype-mismatched template must error, not silently mis-view."""
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ck")
+        save(path, {"a": jnp.ones((4, 4), jnp.float32)})
+        with pytest.raises(ValueError, match="dtype"):
+            restore(path, {"a": jnp.ones((4, 4), jnp.bfloat16)})
+
+
+def test_checkpoint_leaf_count_mismatch_names_layouts():
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ck")
+        save(path, {"a": jnp.ones((2,)), "b": jnp.ones((2,))})
+        with pytest.raises(ValueError, match="leaves"):
+            restore(path, {"a": jnp.ones((2,))})
+
+
+def test_checkpoint_fused_flat_opt_state_roundtrip():
+    """Full TrainState round-trip on the fused path: bf16 params + flat
+    (rows, 128) f32 momentum substrate buffers."""
+    from repro.core.base import apply_updates
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(8, 16)), jnp.bfloat16),
+              "scale": jnp.ones((16,), jnp.float32)}
+    opt = build_optimizer("wa-lars", total_steps=5, learning_rate=0.1,
+                          use_kernel="fused")
+    state = TrainState.create(params, opt)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape), p.dtype), params)
+    # one real update so the flat momentum buffers are non-trivial
+    updates, opt_state = opt.update(grads, state.opt_state, state.params)
+    state = TrainState(state.step + 1, apply_updates(state.params, updates),
+                       opt_state)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ck")
+        save(path, state, step=1)
+        assert latest_step(path) == 1
+        out = restore(path, state)
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(out)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
 # ----- trainer / serving integration -----
 
 def _tiny_lm():

@@ -2,7 +2,10 @@
 # One-shot verification: tier-1 suite on the default (Pallas interpret)
 # dispatch, then the kernel-adjacent tests again under REPRO_FORCE_REF=1
 # so BOTH dispatch modes (pallas kernels and pure-jnp oracles) are
-# exercised in a single invocation. Run from the repo root:  make check
+# exercised in a single invocation, then a CPU end-to-end smoke of the
+# launcher with gradient accumulation (K>1) so the full
+# stack-microbatches -> scan-accumulate -> fused-apply path runs, not
+# just its unit tests. Run from the repo root:  make check
 set -eu
 
 cd "$(dirname "$0")/.."
@@ -16,5 +19,9 @@ echo "== kernel-oracle re-run (REPRO_FORCE_REF=1) =="
 REPRO_FORCE_REF=1 python -m pytest -q \
     tests/test_kernels.py tests/test_segmented_parity.py \
     tests/test_optimizers.py
+
+echo "== e2e launcher smoke (gradient accumulation K=4) =="
+python -m repro.launch.train --smoke --steps 2 --seq 64 \
+    --global-batch 8 --microbatch 2 --log-every 1
 
 echo "check: OK"
