@@ -12,7 +12,10 @@ bench:
 	PYTHONPATH=src:. python benchmarks/bench_kernels.py
 
 # end-to-end CPU smoke of the launcher: global batch 8 = 4 accumulated
-# microbatches of 2, optimizer applied once per global step
+# microbatches of 2, optimizer applied once per global step — then the
+# diagnostics probe smoke (tiny MLP, 2-iteration Lanczos, JSONL sink
+# schema-validated in a tempdir)
 smoke:
 	PYTHONPATH=src python -m repro.launch.train --smoke --steps 2 \
 	    --seq 64 --global-batch 8 --microbatch 2 --log-every 1
+	PYTHONPATH=src python -m repro.diagnostics.smoke

@@ -1,36 +1,39 @@
 """Figure 2 / Appendix F-H: LWN, LGN, LNR traces for WA-LARS vs
-NOWA-LARS vs TVLARS on a large-batch run."""
+NOWA-LARS vs TVLARS on a large-batch run.
+
+The per-step traces stream through ``repro.diagnostics.sink.CsvSink``
+via ``export_recorder`` (the NormRecorder -> sink path) instead of a
+hand-rolled CSV writer.
+"""
 from __future__ import annotations
 
-import numpy as np
+import os
 
-from benchmarks.common import emit, write_csv
+from benchmarks.common import RESULTS_DIR, emit
 from benchmarks.paper_runs import run_classification
+from repro.diagnostics import sink as sink_lib
 
 BATCH = 1024
 LR = 1.0
 
 
 def main() -> None:
-    rows = []
+    path = os.path.join(RESULTS_DIR, "fig2_lnr_traces.csv")
     summaries = {}
-    for opt in ("wa-lars", "nowa-lars", "tvlars"):
-        acc, hist, rec = run_classification(opt, BATCH, LR,
-                                            record_norms=True)
-        arrs = rec.as_arrays()
-        for t in range(arrs["lnr"].shape[0]):
-            rows.append((opt, t,
-                         float(arrs["lwn"][t].mean()),
-                         float(arrs["lgn"][t].mean()),
-                         float(arrs["lnr"][t].mean()),
-                         hist[t]["loss"]))
-        summaries[opt] = rec.summary()
-        emit(f"fig2/{opt}", 0.0,
-             f"max_init_lnr={summaries[opt]['max_initial_lnr']:.3f} "
-             f"acc={acc:.3f}")
-    path = write_csv("fig2_lnr_traces",
-                     ["optimizer", "step", "lwn", "lgn", "lnr", "loss"],
-                     rows)
+    with sink_lib.CsvSink(
+            path, fieldnames=["step", "optimizer", "lwn", "lgn", "lnr",
+                              "loss"]) as sink:
+        for opt in ("wa-lars", "nowa-lars", "tvlars"):
+            acc, hist, rec = run_classification(opt, BATCH, LR,
+                                                record_norms=True)
+            sink_lib.export_recorder(
+                rec, sink,
+                extra=lambda idx, step: {"optimizer": opt,
+                                         "loss": hist[idx]["loss"]})
+            summaries[opt] = rec.summary()
+            emit(f"fig2/{opt}", 0.0,
+                 f"max_init_lnr={summaries[opt]['max_initial_lnr']:.3f} "
+                 f"acc={acc:.3f}")
     # §3.2 observation 3: warm-up caps the early LNR vs no-warm-up
     ok = (summaries["wa-lars"]["max_initial_lnr"]
           <= summaries["nowa-lars"]["max_initial_lnr"] * 1.1)

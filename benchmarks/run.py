@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV lines; full grids land in
   schedules     Figures 1 & 4: warm-up vs TVLARS φ_t family
   fig2          Figure 2: LWN/LGN/LNR traces (WA/NOWA-LARS, TVLARS)
   ablations     §5.2: λ sweep (Fig 5), target LR (Fig 6), init (Fig 7)
+  sharpness     λ_max(H) early-phase trajectory (WA-LARS vs TVLARS)
   kernels       Pallas kernel micro-benchmarks
   roofline      §Roofline terms from the dry-run artifacts
 
@@ -19,7 +20,7 @@ import sys
 import time
 
 SUITES = ("schedules", "kernels", "roofline", "fig2", "table1",
-          "ablations", "ssl")
+          "ablations", "ssl", "sharpness")
 
 
 def run_suite(name: str) -> None:
@@ -37,6 +38,8 @@ def run_suite(name: str) -> None:
         from benchmarks import bench_ablations as mod
     elif name == "kernels":
         from benchmarks import bench_kernels as mod
+    elif name == "sharpness":
+        from benchmarks import bench_sharpness as mod
     elif name == "roofline":
         from benchmarks import bench_roofline as mod
     else:

@@ -70,16 +70,30 @@ class NormRecorder:
             "lnr": np.stack([h.lnr for h in self.history]),
         }
 
+    @staticmethod
+    def summary_window(n: int) -> int:
+        """Head/tail window for ``summary``: ``max(1, n // 5)`` — the
+        same length for both ends, and since n//5 <= n//2 the two
+        windows are disjoint whenever n >= 2 (for n == 1 both are the
+        single step and the decline is 0)."""
+        return max(1, n // 5)
+
     def summary(self) -> dict[str, Any]:
-        """Aggregates the paper reports: max initial LNR, LNR decline."""
+        """Aggregates the paper reports: max initial LNR, LNR decline.
+
+        ``head``/``tail`` are symmetric :meth:`summary_window`-sized
+        slices of the mean-LNR trace — well-defined for short runs
+        (any n >= 1), disjoint for n >= 2."""
         arr = self.as_arrays()
         if arr["lnr"].shape[0] == 0:
             return {}
         mean_lnr = arr["lnr"].mean(axis=1)          # [steps]
         n = len(mean_lnr)
-        head = mean_lnr[: max(1, n // 5)]
-        tail = mean_lnr[-max(1, n // 5):]
+        win = self.summary_window(n)
+        head = mean_lnr[:win]
+        tail = mean_lnr[n - win:]
         return {
+            "window": win,
             "max_initial_lnr": float(head.max()),
             "mean_initial_lnr": float(head.mean()),
             "mean_final_lnr": float(tail.mean()),

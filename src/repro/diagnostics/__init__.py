@@ -1,0 +1,44 @@
+"""repro.diagnostics — sharpness & loss-landscape instrumentation.
+
+The measurement half of the paper's story: LWN/LGN/LNR (``core.
+instrumentation``) say how the optimizer scales layers; this package
+says what the landscape underneath looks like while it does.
+
+    hvp        Hessian-vector products on the flat (rows, 128) buffer
+    lanczos    jit-safe m-step Lanczos: top-k eigenvalues, SLQ stem
+    sharpness  SAM ε-ball sharpness + gradient-noise-scale estimator
+    landscape  filter-normalized 1-D/2-D loss slices
+    probes     Probe protocol + Lanczos/Sharpness/GradNoise probes
+    sink       MetricsSink streaming (console/JSONL/CSV/multi)
+
+Everything runs through the gradient-accumulation microbatch scan at
+fixed peak memory and adds zero ``pallas_call``s to the train step.
+"""
+from repro.diagnostics.hvp import (FlatHVP, make_flat_hvp, padding_mask,
+                                   scanned_grads, scanned_loss, tree_hvp)
+# NB: the ``lanczos`` *function* stays module-scoped
+# (``diagnostics.lanczos.lanczos``) so it doesn't shadow the submodule
+from repro.diagnostics.lanczos import (LanczosResult, lanczos_top_k,
+                                       spectral_density_stem,
+                                       top_k_eigenvalues)
+from repro.diagnostics.landscape import (direction_between,
+                                         filter_normalized_direction,
+                                         loss_slice_1d, loss_slice_2d)
+from repro.diagnostics.probes import (GradNoiseProbe, LanczosProbe,
+                                      Probe, SharpnessProbe, should_run)
+from repro.diagnostics.sharpness import gradient_noise_scale, sam_sharpness
+from repro.diagnostics.sink import (ConsoleSink, CsvSink, JsonlSink,
+                                    MetricsSink, MultiSink, NullSink,
+                                    export_recorder, validate_jsonl)
+
+__all__ = [
+    "ConsoleSink", "CsvSink", "FlatHVP", "GradNoiseProbe", "JsonlSink",
+    "LanczosProbe", "LanczosResult", "MetricsSink", "MultiSink",
+    "NullSink", "Probe", "SharpnessProbe", "direction_between",
+    "export_recorder", "filter_normalized_direction",
+    "gradient_noise_scale", "lanczos_top_k", "loss_slice_1d",
+    "loss_slice_2d", "make_flat_hvp", "padding_mask", "sam_sharpness",
+    "scanned_grads", "scanned_loss", "should_run",
+    "spectral_density_stem", "top_k_eigenvalues", "tree_hvp",
+    "validate_jsonl",
+]

@@ -1,0 +1,170 @@
+"""Hessian-vector products on the flat ``(rows, 128)`` substrate.
+
+The probe subsystem measures curvature of any :class:`repro.training
+.tasks.Task` loss.  Probe vectors live on the same lane-padded flat
+buffer the fused optimizer uses (``core.flatten``): one ``(num_rows,
+LANES)`` f32 array per direction, packed/unpacked with the cached
+PR-1 segment metadata — so Lanczos and the loss-slice probes never
+touch pytree structure in their inner loops and inherit the
+Pallas-friendly layout for free.
+
+Under gradient accumulation the probe batch carries the same
+``[K, B/K, ...]`` stacked microbatch axis as training batches.  HVPs
+are *linear* in the loss, so the Hessian of the accumulated mean loss
+is the mean of per-microbatch Hessians: we scan K per-microbatch HVPs
+and average, which keeps peak memory at one microbatch of activations
+— the identical memory envelope as the training scan — instead of
+differentiating through the whole scan.
+
+Padding semantics: :func:`unpack` ignores pad coordinates and packing
+a gradient tree zero-fills them, so the flat operator is the true tree
+Hessian embedded in the padded space with an exact null space on the
+pad coordinates.  Seed Lanczos with a :func:`padding_mask`-projected
+vector and every Krylov vector stays in the real-parameter subspace.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatten
+
+PyTree = Any
+
+
+def check_stacked(batch: PyTree, accum_steps: int) -> None:
+    """Validate the ``[K, B/K, ...]`` microbatch axis — THE contract
+    shared by the trainer's accumulation scan and every probe."""
+    if accum_steps < 1:
+        raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
+    if accum_steps == 1:
+        return
+    for leaf in jax.tree_util.tree_leaves(batch):
+        if leaf.shape[:1] != (accum_steps,):
+            raise ValueError(
+                f"accum_steps={accum_steps} but a batch leaf has leading "
+                f"dim {leaf.shape[:1]} (shape {leaf.shape}); stack "
+                f"microbatches as [K, B/K, ...] — see "
+                f"data.pipeline.stack_microbatches")
+
+
+def scanned_loss(task, params: PyTree, batch: PyTree,
+                 accum_steps: int = 1) -> jnp.ndarray:
+    """Mean task loss over K stacked microbatches (forward only).
+
+    ``accum_steps == 1`` is a plain loss call; K > 1 scans microbatches
+    at fixed peak memory.  Matches the accumulated training objective
+    (mean of per-microbatch mean losses).
+    """
+    check_stacked(batch, accum_steps)
+    if accum_steps == 1:
+        loss, _ = task.loss_fn(params, batch)
+        return loss.astype(jnp.float32)
+
+    def body(acc, microbatch):
+        loss, _ = task.loss_fn(params, microbatch)
+        return acc + loss.astype(jnp.float32), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), batch)
+    return total / accum_steps
+
+
+def scanned_grads(task, params: PyTree, batch: PyTree,
+                  accum_steps: int = 1) -> tuple[jnp.ndarray, PyTree]:
+    """(mean loss, f32 mean grads) over K stacked microbatches."""
+    check_stacked(batch, accum_steps)
+    grad_fn = jax.value_and_grad(lambda p, b: task.loss_fn(p, b)[0])
+    if accum_steps == 1:
+        loss, grads = grad_fn(params, batch)
+        return loss.astype(jnp.float32), jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+
+    def body(carry, microbatch):
+        loss_acc, grad_acc = carry
+        loss, grads = grad_fn(params, microbatch)
+        grad_acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+        return (loss_acc + loss.astype(jnp.float32), grad_acc), None
+
+    carry0 = (jnp.zeros((), jnp.float32),
+              jax.tree_util.tree_map(
+                  lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    (loss_sum, grad_sum), _ = jax.lax.scan(body, carry0, batch)
+    return loss_sum / accum_steps, jax.tree_util.tree_map(
+        lambda g: g / accum_steps, grad_sum)
+
+
+def flat_loss_fn(task, spec: flatten.FlatSpec, batch: PyTree,
+                 accum_steps: int = 1) -> Callable[[jnp.ndarray],
+                                                   jnp.ndarray]:
+    """``loss(w2d)`` on the flat buffer (unpack once, then scan)."""
+
+    def loss_of(w2d: jnp.ndarray) -> jnp.ndarray:
+        params = flatten.unpack_tree(w2d, spec)
+        return scanned_loss(task, params, batch, accum_steps)
+
+    return loss_of
+
+
+def padding_mask(spec: flatten.FlatSpec) -> jnp.ndarray:
+    """(num_rows, LANES) f32 mask: 1 on real parameter coords, 0 on
+    lane/tail padding.  Project Lanczos seed vectors with this so the
+    Krylov space never leaves the real-parameter subspace."""
+    m = np.zeros((spec.num_rows * flatten.LANES,), np.float32)
+    for off, size in zip(spec.row_offset, spec.sizes):
+        m[off * flatten.LANES: off * flatten.LANES + size] = 1.0
+    return jnp.asarray(m.reshape(spec.num_rows, flatten.LANES))
+
+
+class FlatHVP(NamedTuple):
+    """Flat-substrate Hessian operator for one (task, params, batch)."""
+    spec: flatten.FlatSpec
+    w2d: jnp.ndarray                              # packed params, f32
+    matvec: Callable[[jnp.ndarray], jnp.ndarray]  # v2d -> H @ v2d
+    dim: int                                      # true param count
+
+
+def make_flat_hvp(task, params: PyTree, batch: PyTree, *,
+                  accum_steps: int = 1) -> FlatHVP:
+    """Build ``v2d -> H(loss) @ v2d`` on the flat buffer.
+
+    The Hessian is of the *accumulated* mean loss; K > 1 scans one
+    per-microbatch jvp-of-grad at a time (linearity of the HVP) so
+    peak memory stays one microbatch regardless of K.
+    """
+    check_stacked(batch, accum_steps)
+    spec = flatten.build_spec(params)
+    w2d = flatten.pack_tree(params, spec)
+
+    def mb_hvp(v2d: jnp.ndarray, microbatch: PyTree) -> jnp.ndarray:
+        def loss_of(w):
+            loss, _ = task.loss_fn(flatten.unpack_tree(w, spec),
+                                   microbatch)
+            return loss.astype(jnp.float32)
+
+        return jax.jvp(jax.grad(loss_of), (w2d,), (v2d,))[1]
+
+    def matvec(v2d: jnp.ndarray) -> jnp.ndarray:
+        v2d = v2d.astype(jnp.float32)
+        if accum_steps == 1:
+            return mb_hvp(v2d, batch)
+
+        def body(acc, microbatch):
+            return acc + mb_hvp(v2d, microbatch), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros_like(w2d), batch)
+        return total / accum_steps
+
+    return FlatHVP(spec=spec, w2d=w2d, matvec=matvec,
+                   dim=sum(spec.sizes))
+
+
+def tree_hvp(task, params: PyTree, batch: PyTree,
+             v: PyTree) -> PyTree:
+    """Reference tree-space HVP (jvp-of-grad); the flat path must match
+    this to float32 precision — see ``tests/test_diagnostics.py``."""
+    grad_fn = jax.grad(lambda p: task.loss_fn(p, batch)[0])
+    return jax.jvp(grad_fn, (params,), (v,))[1]

@@ -1,0 +1,90 @@
+"""Filter-normalized 1-D / 2-D loss-landscape slices (Li et al. 2018).
+
+Visualizes the geometry the spectral probes measure: the loss along
+``w + α·d`` (1-D) or ``w + α·d₁ + β·d₂`` (2-D) for directions that
+are either random *filter-normalized* Gaussians — each filter of d is
+rescaled to the norm of the matching filter of w, removing the scale
+invariance that makes raw random slices meaningless — or the
+difference between two checkpoints (the paper's LARS-vs-TVLARS
+trajectory comparison).
+
+Evaluation runs on the flat ``(rows, 128)`` substrate: params and
+directions are packed once, the grid is a ``lax.map`` over
+``loss(w2d + α·d2d)`` with the microbatch scan inside, so a 2-D grid
+of G² points costs G² scanned forward passes and no repacking.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatten
+from repro.diagnostics import hvp
+
+PyTree = Any
+
+
+def filter_normalized_direction(key, params: PyTree, *,
+                                eps: float = 1e-12) -> PyTree:
+    """Random Gaussian direction, filter-normalized against ``params``.
+
+    For leaves with ndim ≥ 2 each output filter (slice along the last
+    axis — columns of dense kernels, output channels of HWIO convs) of
+    d is scaled to the norm of the corresponding filter of w; 0/1-D
+    leaves (biases, norms) are scaled leaf-wise.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for k, w in zip(keys, leaves):
+        w = w.astype(jnp.float32)
+        d = jax.random.normal(k, w.shape, jnp.float32)
+        if w.ndim >= 2:
+            axes = tuple(range(w.ndim - 1))
+            w_n = jnp.sqrt(jnp.sum(w ** 2, axis=axes, keepdims=True))
+            d_n = jnp.sqrt(jnp.sum(d ** 2, axis=axes, keepdims=True))
+        else:
+            w_n = jnp.sqrt(jnp.sum(w ** 2))
+            d_n = jnp.sqrt(jnp.sum(d ** 2))
+        out.append(d * w_n / (d_n + eps))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def direction_between(params_a: PyTree, params_b: PyTree) -> PyTree:
+    """Checkpoint-to-checkpoint direction ``b − a`` (α=0 is a, α=1 b)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: b.astype(jnp.float32) - a.astype(jnp.float32),
+        params_a, params_b)
+
+
+def loss_slice_1d(task, params: PyTree, direction: PyTree, batch: PyTree,
+                  alphas: jnp.ndarray, *,
+                  accum_steps: int = 1) -> jnp.ndarray:
+    """``loss(w + α·d)`` for each α — returns ``[len(alphas)]`` f32."""
+    spec = flatten.build_spec(params)
+    w2d = flatten.pack_tree(params, spec)
+    d2d = flatten.pack_tree(direction, spec)
+    loss_of = hvp.flat_loss_fn(task, spec, batch, accum_steps)
+    return jax.lax.map(lambda a: loss_of(w2d + a * d2d),
+                       jnp.asarray(alphas, jnp.float32))
+
+
+def loss_slice_2d(task, params: PyTree, d1: PyTree, d2: PyTree,
+                  batch: PyTree, alphas: jnp.ndarray,
+                  betas: jnp.ndarray, *,
+                  accum_steps: int = 1) -> jnp.ndarray:
+    """``loss(w + α·d₁ + β·d₂)`` grid — ``[len(alphas), len(betas)]``."""
+    spec = flatten.build_spec(params)
+    w2d = flatten.pack_tree(params, spec)
+    d1_2d = flatten.pack_tree(d1, spec)
+    d2_2d = flatten.pack_tree(d2, spec)
+    loss_of = hvp.flat_loss_fn(task, spec, batch, accum_steps)
+    alphas = jnp.asarray(alphas, jnp.float32)
+    betas = jnp.asarray(betas, jnp.float32)
+    grid = jnp.stack(jnp.meshgrid(alphas, betas, indexing="ij"),
+                     axis=-1).reshape(-1, 2)
+    losses = jax.lax.map(
+        lambda ab: loss_of(w2d + ab[0] * d1_2d + ab[1] * d2_2d), grid)
+    return losses.reshape(alphas.shape[0], betas.shape[0])

@@ -1,0 +1,147 @@
+"""The ``Probe`` protocol + concrete sharpness/curvature probes.
+
+A probe is any object with a ``name``, an ``every`` (run at steps
+where ``step % every == 0``) and ``__call__(step, state) ->
+{metric: float}``.  The trainer's ``fit(..., callbacks=[...],
+sink=...)`` path invokes due probes after the optimizer step and
+streams their results (keys prefixed ``{name}/``) through the metrics
+sink alongside the per-step training metrics.
+
+Probes are *separate* jitted computations over a held probe batch —
+they never touch (or recompile) the train step, so the fused
+optimizer's 2-``pallas_call`` launch invariant is untouched and their
+cost is bounded by their schedule.  With a stacked ``[K, B/K, ...]``
+probe batch every probe runs through the same microbatch scan as
+training: fixed peak memory at any probe-batch size.
+
+Concrete probes:
+
+* :class:`LanczosProbe`  — top-k Hessian eigenvalues (λ_max first)
+  via flat-substrate HVPs + m-step Lanczos;
+* :class:`SharpnessProbe` — SAM ε-ball sharpness;
+* :class:`GradNoiseProbe` — McCandlish simple gradient noise scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.diagnostics import hvp, sharpness
+from repro.diagnostics.lanczos import lanczos_top_k
+
+PyTree = Any
+
+
+@runtime_checkable
+class Probe(Protocol):
+    name: str
+    every: int
+
+    def __call__(self, step: int, state) -> dict[str, float]:
+        ...
+
+
+def should_run(step: int, every: int) -> bool:
+    """The probe schedule: every N steps, starting at step 0."""
+    return every > 0 and step % every == 0
+
+
+def _host_floats(metrics: dict[str, jnp.ndarray]) -> dict[str, float]:
+    return {k: float(v) for k, v in metrics.items()}
+
+
+@dataclasses.dataclass
+class LanczosProbe:
+    """Top-k Hessian eigenvalues of the task loss on a held batch.
+
+    Emits ``{"lambda_max": λ₁, "eig_2": λ₂, ...}``.  The HVP runs on
+    the flat ``(rows, 128)`` buffer; the Lanczos seed is a fixed-key
+    Gaussian projected off the padding coordinates, so trajectories
+    across steps are comparable (same Krylov seed every probe).
+    """
+    task: Any
+    batch: PyTree
+    every: int = 10
+    num_iters: int = 16
+    top_k: int = 1
+    accum_steps: int = 1
+    reorth: bool = True
+    seed: int = 0
+    name: str = "lanczos"
+    _fn: Optional[Any] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        if not 1 <= self.top_k <= self.num_iters:
+            raise ValueError(f"top_k={self.top_k} must be in "
+                             f"[1, num_iters={self.num_iters}]")
+        hvp.check_stacked(self.batch, self.accum_steps)
+
+    def _build(self):
+        def run(params):
+            op = hvp.make_flat_hvp(self.task, params, self.batch,
+                                   accum_steps=self.accum_steps)
+            v0 = hvp.padding_mask(op.spec) * jax.random.normal(
+                jax.random.PRNGKey(self.seed), op.w2d.shape)
+            return lanczos_top_k(op.matvec, v0, self.num_iters,
+                                 self.top_k, reorth=self.reorth)
+
+        return jax.jit(run)
+
+    def __call__(self, step: int, state) -> dict[str, float]:
+        if self._fn is None:
+            self._fn = self._build()
+        evals = jax.device_get(self._fn(state.params))
+        out = {"lambda_max": float(evals[0])}
+        for j in range(1, self.top_k):
+            out[f"eig_{j + 1}"] = float(evals[j])
+        return out
+
+
+@dataclasses.dataclass
+class SharpnessProbe:
+    """SAM ε-ball sharpness of the task loss on a held batch."""
+    task: Any
+    batch: PyTree
+    every: int = 10
+    rho: float = 0.05
+    accum_steps: int = 1
+    name: str = "sharpness"
+    _fn: Optional[Any] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def __call__(self, step: int, state) -> dict[str, float]:
+        if self._fn is None:
+            self._fn = jax.jit(lambda p: sharpness.sam_sharpness(
+                self.task, p, self.batch, rho=self.rho,
+                accum_steps=self.accum_steps))
+        return _host_floats(jax.device_get(self._fn(state.params)))
+
+
+@dataclasses.dataclass
+class GradNoiseProbe:
+    """Simple gradient noise scale from the stacked probe batch's
+    per-microbatch gradients (needs ``accum_steps >= 2``)."""
+    task: Any
+    batch: PyTree
+    accum_steps: int
+    every: int = 10
+    name: str = "gns"
+    _fn: Optional[Any] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.accum_steps < 2:
+            raise ValueError("GradNoiseProbe needs accum_steps >= 2 "
+                             "(stacked microbatches); got "
+                             f"{self.accum_steps}")
+
+    def __call__(self, step: int, state) -> dict[str, float]:
+        if self._fn is None:
+            self._fn = jax.jit(lambda p: sharpness.gradient_noise_scale(
+                self.task, p, self.batch,
+                accum_steps=self.accum_steps))
+        return _host_floats(jax.device_get(self._fn(state.params)))

@@ -1,0 +1,106 @@
+"""Scalar sharpness measures: SAM ε-ball sharpness + gradient noise.
+
+Two cheap (few-forward-pass) instruments that complement the Lanczos
+spectral probes:
+
+* :func:`sam_sharpness` — loss rise at the worst-case-direction
+  first-order ascent step ``w + ρ·g/‖g‖`` (Foret et al. 2021).  The
+  paper's claim that warm-up LARS "gets trapped in sharp minimizers
+  early on" shows up directly in this trace.
+* :func:`gradient_noise_scale` — the McCandlish et al. (2018) simple
+  noise scale ``B_noise = tr(Σ)/‖G‖²`` estimated from the K
+  per-microbatch gradients the accumulation scan already computes:
+  unbiased ``‖G‖²`` and ``tr(Σ)`` estimates from the (B/K)-sample and
+  B-sample gradient norms.  TVLARS's "gradient exploration" phase is
+  exactly a high-noise-scale regime.
+
+Both scan microbatches at fixed peak memory (one microbatch of
+activations), like the training step.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import global_norm
+from repro.diagnostics import hvp
+
+PyTree = Any
+
+
+def sam_sharpness(task, params: PyTree, batch: PyTree, *,
+                  rho: float = 0.05, accum_steps: int = 1,
+                  eps: float = 1e-12) -> dict[str, jnp.ndarray]:
+    """SAM-style ε-ball sharpness on a probe batch.
+
+    Returns ``{"sam_sharpness", "loss", "perturbed_loss"}`` where
+    ``sam_sharpness = loss(w + ρ·g/‖g‖) − loss(w)`` for the
+    accumulated mean loss/gradient (≥ 0 up to higher-order terms).
+    """
+    loss, grads = hvp.scanned_grads(task, params, batch, accum_steps)
+    gnorm = global_norm(grads)
+    perturbed = jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      + rho * g / (gnorm + eps)).astype(p.dtype),
+        params, grads)
+    perturbed_loss = hvp.scanned_loss(task, perturbed, batch, accum_steps)
+    return {"sam_sharpness": perturbed_loss - loss, "loss": loss,
+            "perturbed_loss": perturbed_loss}
+
+
+def _microbatch_size(batch: PyTree) -> int:
+    leaf = jax.tree_util.tree_leaves(batch)[0]
+    if leaf.ndim < 2:
+        raise ValueError(
+            f"stacked probe batch leaves need a [K, B/K, ...] shape; "
+            f"got {leaf.shape}")
+    return int(leaf.shape[1])
+
+
+def gradient_noise_scale(task, params: PyTree, batch: PyTree, *,
+                         accum_steps: int,
+                         eps: float = 1e-12) -> dict[str, jnp.ndarray]:
+    """Simple gradient noise scale from per-microbatch gradients.
+
+    ``batch`` must be stacked ``[K, B/K, ...]`` with K ≥ 2.  With
+    ``b = B/K`` and ``B = K·b``, the unbiased estimators
+
+        ‖G‖²   ≈ (B·‖g_B‖² − b·E[‖g_b‖²]) / (B − b)
+        tr(Σ)  ≈ (E[‖g_b‖²] − ‖g_B‖²) / (1/b − 1/B)
+
+    give ``B_noise = tr(Σ)/‖G‖²`` — the McCandlish et al. critical
+    batch size.  Returns ``{"grad_noise_scale", "grad_sq",
+    "trace_cov"}`` (``grad_sq`` clamped to ≥ 0 before the ratio; in a
+    noise-dominated regime the ``‖G‖²`` estimate can go negative, so
+    the reported scale saturates rather than flipping sign).
+    """
+    if accum_steps < 2:
+        raise ValueError("gradient_noise_scale needs accum_steps >= 2 "
+                         "(two microbatch sizes to contrast); got "
+                         f"{accum_steps}")
+    hvp.check_stacked(batch, accum_steps)
+    b_small = _microbatch_size(batch)
+    b_big = accum_steps * b_small
+    grad_fn = jax.grad(lambda p, mb: task.loss_fn(p, mb)[0])
+
+    def body(carry, microbatch):
+        grad_acc, sq_acc = carry
+        g = grad_fn(params, microbatch)
+        grad_acc = jax.tree_util.tree_map(
+            lambda a, x: a + x.astype(jnp.float32), grad_acc, g)
+        return (grad_acc, sq_acc + global_norm(g) ** 2), None
+
+    carry0 = (jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        jnp.zeros((), jnp.float32))
+    (grad_sum, sq_sum), _ = jax.lax.scan(body, carry0, batch)
+    g_big = jax.tree_util.tree_map(lambda g: g / accum_steps, grad_sum)
+    s_big = global_norm(g_big) ** 2          # ‖g_B‖²
+    s_small = sq_sum / accum_steps           # E[‖g_b‖²]
+    grad_sq = (b_big * s_big - b_small * s_small) / (b_big - b_small)
+    trace_cov = (s_small - s_big) / (1.0 / b_small - 1.0 / b_big)
+    noise_scale = trace_cov / jnp.maximum(grad_sq, eps)
+    return {"grad_noise_scale": noise_scale, "grad_sq": grad_sq,
+            "trace_cov": trace_cov}

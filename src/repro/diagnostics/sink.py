@@ -1,0 +1,240 @@
+"""Streaming metrics sinks — one write path for trainer + probes.
+
+``MetricsSink`` replaces the trainer's ad-hoc ``log_fn=print``: the
+fit loop (and the launcher) push one ``write(step, metrics)`` per
+global step, probes push their results on their own schedule, and the
+sink decides the representation:
+
+* :class:`ConsoleSink` — reproduces the trainer's historical
+  ``step  NNN k=v.vvvv ...`` line verbatim, gated by ``every``;
+* :class:`JsonlSink` — one JSON object per write (``{"step": int,
+  ...}``), streamed and flushed per record, the machine-readable
+  probe trace (schema checked by :func:`validate_jsonl`);
+* :class:`CsvSink` — header from the first row, for flat tables like
+  the Fig. 2 LNR traces;
+* :class:`MultiSink` — fan-out to several sinks.
+
+:func:`export_recorder` streams a ``NormRecorder``'s per-step
+leaf-mean LWN/LGN/LNR through any sink, so benchmarks stop
+hand-rolling CSV writers for Fig. 2 data.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import numbers
+import os
+from typing import Any, Callable, Mapping, Optional
+
+import numpy as np
+
+Metrics = Mapping[str, Any]
+
+
+def _finite(x: float) -> Optional[float]:
+    # NaN/inf have no valid JSON encoding (json.dumps would emit the
+    # spec-invalid NaN/Infinity tokens) -> null, which validate_jsonl
+    # and downstream parsers both accept
+    return x if np.isfinite(x) else None
+
+
+def _jsonify(v: Any) -> Any:
+    if isinstance(v, (str, bool)) or v is None:
+        return v
+    if isinstance(v, numbers.Integral):
+        return int(v)
+    if isinstance(v, numbers.Real):
+        return _finite(float(v))
+    arr = np.asarray(v)
+    if arr.ndim == 0:
+        return _finite(float(arr))
+    return [_finite(x) if isinstance(x, float) else x
+            for x in arr.tolist()]
+
+
+class MetricsSink:
+    """write(step, metrics) stream; context-manager closeable.
+
+    ``last=True`` marks the final step of a run so rate-limited sinks
+    (console) can force a flush of the closing line.
+    """
+
+    def write(self, step: int, metrics: Metrics, *,
+              last: bool = False) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self) -> "MetricsSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class NullSink(MetricsSink):
+    def write(self, step: int, metrics: Metrics, *,
+              last: bool = False) -> None:
+        pass
+
+
+class ConsoleSink(MetricsSink):
+    """The trainer's historical console line, verbatim.
+
+    Prints ``step {i:5d} k=v.vvvv ...`` for float-valued metrics when
+    ``step % every == 0`` or on the last/probe write; ``every=0``
+    silences it.
+    """
+
+    def __init__(self, every: int = 1, log_fn: Callable = print):
+        self.every = every
+        self.log_fn = log_fn
+
+    def write(self, step: int, metrics: Metrics, *,
+              last: bool = False) -> None:
+        if not (self.every and (step % self.every == 0 or last)):
+            return
+        self.log_fn(f"step {step:5d} " + " ".join(
+            f"{k}={v:.4f}" for k, v in metrics.items()
+            if isinstance(v, float)))
+
+
+class JsonlSink(MetricsSink):
+    """Streamed JSONL: one ``{"step": int, **static, **metrics}``
+    object per write, flushed immediately (tail -f friendly).
+
+    The file is truncated on open by default so re-running a command
+    with the same ``--metrics-out`` never interleaves stale records
+    from a previous run; pass ``mode="a"`` to append deliberately
+    (e.g. resuming a run).  Non-finite floats are written as ``null``
+    — bare ``NaN`` tokens would make the file invalid JSON.
+    """
+
+    def __init__(self, path: str, *, static: Optional[Metrics] = None,
+                 mode: str = "w"):
+        if mode not in ("w", "a"):
+            raise ValueError(f"mode must be 'w' or 'a', got {mode!r}")
+        self.path = path
+        self.static = dict(static or {})
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._f = open(path, mode)
+
+    def write(self, step: int, metrics: Metrics, *,
+              last: bool = False) -> None:
+        record = {"step": int(step), **self.static,
+                  **{k: _jsonify(v) for k, v in metrics.items()}}
+        self._f.write(json.dumps(record) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class CsvSink(MetricsSink):
+    """Streaming CSV table for *homogeneous* rows; the header is
+    ``step`` + the first row's keys, later rows drop unknown keys and
+    blank missing ones.  A row sharing NO metric key with the header
+    raises — a heterogeneous stream (e.g. training metrics + probe
+    results from ``fit``) belongs in :class:`JsonlSink`, and dropping
+    it silently would lose the probe trace."""
+
+    def __init__(self, path: str,
+                 fieldnames: Optional[list[str]] = None):
+        self.path = path
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._f = open(path, "w", newline="")
+        self._writer: Optional[csv.DictWriter] = None
+        self._fieldnames = fieldnames
+
+    def write(self, step: int, metrics: Metrics, *,
+              last: bool = False) -> None:
+        if self._writer is None:
+            names = self._fieldnames or ["step"] + list(metrics)
+            if "step" not in names:
+                names = ["step"] + names
+            self._writer = csv.DictWriter(self._f, fieldnames=names,
+                                          restval="",
+                                          extrasaction="ignore")
+            self._writer.writeheader()
+        if metrics and not set(metrics) & set(self._writer.fieldnames):
+            raise ValueError(
+                f"CsvSink({self.path!r}): row keys {sorted(metrics)} "
+                f"share nothing with the header "
+                f"{self._writer.fieldnames}; use JsonlSink for "
+                f"heterogeneous metric streams")
+        self._writer.writerow(
+            {"step": int(step),
+             **{k: _jsonify(v) for k, v in metrics.items()}})
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class MultiSink(MetricsSink):
+    def __init__(self, *sinks: MetricsSink):
+        self.sinks = sinks
+
+    def write(self, step: int, metrics: Metrics, *,
+              last: bool = False) -> None:
+        for s in self.sinks:
+            s.write(step, metrics, last=last)
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()
+
+
+def export_recorder(recorder, sink: MetricsSink, *,
+                    extra: Optional[Any] = None) -> int:
+    """Stream ``NormRecorder`` history through ``sink``, one row per
+    recorded step with leaf-mean ``lwn``/``lgn``/``lnr``.
+
+    ``extra``: static dict of additional columns, or a callable
+    ``(idx, step) -> dict`` for per-row columns (e.g. the loss trace).
+    Returns the number of rows written.
+    """
+    arrs = recorder.as_arrays()
+    for idx, step in enumerate(recorder.steps):
+        if callable(extra):
+            row = dict(extra(idx, step))
+        else:
+            row = dict(extra or {})
+        row.update(lwn=float(arrs["lwn"][idx].mean()),
+                   lgn=float(arrs["lgn"][idx].mean()),
+                   lnr=float(arrs["lnr"][idx].mean()))
+        sink.write(step, row, last=idx == len(recorder.steps) - 1)
+    return len(recorder.steps)
+
+
+def validate_jsonl(path: str) -> int:
+    """Schema-check a metrics JSONL: every line a JSON object with an
+    int ``step`` and only scalar/str/bool/list values.  Returns the
+    record count; raises ``ValueError`` on any violation."""
+    n = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"{path}:{lineno}: not valid JSON: {e}") from e
+            if not isinstance(rec, dict):
+                raise ValueError(f"{path}:{lineno}: record is "
+                                 f"{type(rec).__name__}, expected object")
+            if not isinstance(rec.get("step"), int) \
+                    or isinstance(rec.get("step"), bool):
+                raise ValueError(
+                    f"{path}:{lineno}: missing/non-int 'step' field")
+            for k, v in rec.items():
+                if not isinstance(v, (int, float, str, bool, list,
+                                      type(None))):
+                    raise ValueError(
+                        f"{path}:{lineno}: field {k!r} has "
+                        f"non-scalar type {type(v).__name__}")
+            n += 1
+    return n

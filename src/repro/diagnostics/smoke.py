@@ -1,0 +1,85 @@
+"""CPU probe smoke: tiny MLP + 2-iteration Lanczos + JSONL schema check.
+
+Run by ``tools/check.sh`` / ``make smoke``:
+
+    PYTHONPATH=src python -m repro.diagnostics.smoke
+
+Trains a tiny MLP classifier for a few steps with a LanczosProbe and a
+SharpnessProbe streaming into a JSONL sink in a tempdir, then
+schema-validates the file and asserts the probe emitted a finite
+λ_max every scheduled step.  Exit code 0 = subsystem end-to-end OK.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import tempfile
+
+import jax
+
+from repro.core import build_optimizer
+from repro.data.synthetic import ClassificationData, batch_iterator
+from repro.diagnostics import probes, sink as sink_lib
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+from repro.training import TrainState, classifier_task, fit
+from repro.training.trainer import make_train_step
+
+
+def run(out_dir: str, *, steps: int = 4, probe_every: int = 2,
+        num_iters: int = 2) -> str:
+    """Run the smoke; returns the JSONL path (raises on any failure)."""
+    data = ClassificationData(num_classes=4, image_size=8, seed=0)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                                 num_classes=4, hidden=16, depth=2)
+    opt = build_optimizer("tvlars", total_steps=steps, learning_rate=0.5)
+    state = TrainState.create(params, opt)
+    task = classifier_task(apply_mlp_classifier)
+    probe_batch = data.batch(jax.random.PRNGKey(99), 16)
+    path = os.path.join(out_dir, "probe_smoke.jsonl")
+    with sink_lib.JsonlSink(path, static={"run": "smoke"}) as sink:
+        fit(make_train_step(task, opt), state,
+            batch_iterator(data, 16), steps, sink=sink,
+            callbacks=[
+                probes.LanczosProbe(task, probe_batch, every=probe_every,
+                                    num_iters=num_iters, top_k=1),
+                probes.SharpnessProbe(task, probe_batch,
+                                      every=probe_every),
+            ])
+
+    n = sink_lib.validate_jsonl(path)
+    expected_probe_steps = len(range(0, steps, probe_every))
+    lam = [r["lanczos/lambda_max"] for r in map(json.loads, open(path))
+           if "lanczos/lambda_max" in r]
+    if len(lam) != expected_probe_steps:
+        raise AssertionError(
+            f"expected {expected_probe_steps} lambda_max records, "
+            f"got {len(lam)} (of {n} total)")
+    if not all(math.isfinite(x) for x in lam):
+        raise AssertionError(f"non-finite lambda_max in trace: {lam}")
+    print(f"probe smoke: OK — {n} JSONL records, "
+          f"{len(lam)} λ_max probes (last={lam[-1]:.4f}) -> {path}")
+    return path
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="output dir (default: fresh tempdir)")
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--probe-every", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=2)
+    args = ap.parse_args(argv)
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        run(args.out, steps=args.steps, probe_every=args.probe_every,
+            num_iters=args.iters)
+    else:
+        with tempfile.TemporaryDirectory() as td:
+            run(td, steps=args.steps, probe_every=args.probe_every,
+                num_iters=args.iters)
+
+
+if __name__ == "__main__":
+    main()

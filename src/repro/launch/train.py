@@ -13,9 +13,16 @@ under ``use_kernel="fused"``, regardless of K). The optimizer/schedule
 are built from the *global* batch size — that is what the paper's
 batch-size LR scaling (§5.2.2) and TVLARS's γ_min (§5.2.1) key off.
 
+Sharpness probes (``repro.diagnostics``): ``--probe-every N`` runs an
+m-step Lanczos λ_max(H) probe on a held batch every N steps (a
+separate jitted computation — the train step and its 2-``pallas_call``
+invariant are untouched); ``--metrics-out`` streams every step's
+metrics plus the probe trace to JSONL.
+
 Usage:
   python -m repro.launch.train --arch qwen2.5-3b --smoke \
-      --optimizer tvlars --steps 20 --global-batch 8 --microbatch 2
+      --optimizer tvlars --steps 20 --global-batch 8 --microbatch 2 \
+      --probe-every 5 --metrics-out /tmp/run.jsonl
 """
 from __future__ import annotations
 
@@ -30,10 +37,13 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core import build_optimizer
 from repro.data import pipeline
 from repro.data.synthetic import lm_batch
+from repro.diagnostics import probes
+from repro.diagnostics import sink as diag_sink
 from repro.launch import sharding
 from repro.launch.mesh import make_host_mesh
 from repro.models import extra_embed_shape, get_model
 from repro.models import layers as layers_lib
+from repro.training import tasks
 from repro.training.train_state import TrainState
 from repro.training.trainer import make_train_step
 
@@ -58,6 +68,22 @@ def main() -> None:
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--probe-every", type=int, default=0,
+                    help="run the Lanczos sharpness probe every N steps "
+                         "(0 = off); probes are separate jitted "
+                         "computations on a held batch — the train "
+                         "step is untouched")
+    ap.add_argument("--probe-topk", type=int, default=1,
+                    help="how many top Hessian eigenvalues to report")
+    ap.add_argument("--probe-iters", type=int, default=8,
+                    help="Lanczos iterations per probe")
+    ap.add_argument("--probe-no-reorth", action="store_true",
+                    help="skip full reorthogonalization; the stored "
+                         "Krylov basis is iters x params floats, so "
+                         "disable it for full-size (non --smoke) archs")
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream per-step metrics + probe results to "
+                         "this JSONL file (see repro.diagnostics.sink)")
     args = ap.parse_args()
 
     global_batch = args.global_batch if args.global_batch is not None \
@@ -105,6 +131,30 @@ def main() -> None:
         batch_dim = 1 if accum_steps > 1 else 0
         print(f"global_batch={global_batch} microbatch={microbatch} "
               f"accum_steps={accum_steps} mesh={tuple(mesh.shape.items())}")
+
+        sink = diag_sink.JsonlSink(
+            args.metrics_out,
+            static={"arch": args.arch, "optimizer": args.optimizer,
+                    "global_batch": global_batch}) \
+            if args.metrics_out else None
+        probe = None
+        if args.probe_every > 0:
+            # held probe batch: fixed key, same [K, B/K, ...] stacking
+            # (and therefore the same scan memory envelope) as training
+            ptoks, plabels = lm_batch(jax.random.PRNGKey(997),
+                                      global_batch, args.seq,
+                                      cfg.vocab_size)
+            pbatch = {"tokens": ptoks, "labels": plabels}
+            if es is not None:
+                pbatch["extra_embeds"] = jnp.zeros(es, cfg.cdtype)
+            if accum_steps > 1:
+                pbatch = pipeline.stack_microbatches(pbatch, accum_steps)
+            probe = probes.LanczosProbe(
+                tasks.lm_task(model), pbatch, every=args.probe_every,
+                num_iters=args.probe_iters, top_k=args.probe_topk,
+                accum_steps=accum_steps,
+                reorth=not args.probe_no_reorth)
+
         t0 = time.time()
         for i in range(args.steps):
             toks, labels = lm_batch(jax.random.fold_in(rng, i), global_batch,
@@ -118,12 +168,26 @@ def main() -> None:
                 batch = pipeline.shard_batch(mesh, batch,
                                              batch_dim=batch_dim)
             state, metrics = step_fn(state, batch)
-            if i % args.log_every == 0 or i == args.steps - 1:
-                m = {k: float(metrics[k])
-                     for k in ("loss", "ce", "grad_norm")}
-                print(f"step {i:4d} loss={m['loss']:.4f} "
-                      f"ce={m['ce']:.4f} gnorm={m['grad_norm']:.3f} "
+            last = i == args.steps - 1
+            host = {k: float(v) for k, v in metrics.items()
+                    if jnp.ndim(v) == 0}
+            if sink is not None:
+                sink.write(i, host, last=last)
+            if i % args.log_every == 0 or last:
+                print(f"step {i:4d} loss={host['loss']:.4f} "
+                      f"ce={host['ce']:.4f} "
+                      f"gnorm={host['grad_norm']:.3f} "
                       f"({time.time()-t0:.1f}s)")
+            if probe is not None and probes.should_run(i, probe.every):
+                out = probe(i, state)
+                if sink is not None:
+                    sink.write(i, {f"{probe.name}/{k}": v
+                                   for k, v in out.items()}, last=True)
+                print(f"step {i:4d} probe lambda_max="
+                      f"{out['lambda_max']:.4f}")
+        if sink is not None:
+            sink.close()
+            print(f"metrics -> {args.metrics_out}")
         print(f"done: {args.steps} steps in {time.time()-t0:.1f}s, "
               f"final loss {float(metrics['loss']):.4f}")
         assert np.isfinite(float(metrics["loss"])), "NaN/inf loss"

@@ -25,13 +25,16 @@ global batch. ``fit`` optionally records the full per-layer traces.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Union
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import apply_updates, instrumentation
 from repro.core.base import GradientTransform
+from repro.diagnostics import hvp as hvp_lib
+from repro.diagnostics import probes as probes_lib
+from repro.diagnostics import sink as sinks
 from repro.models.registry import Model
 from repro.training import tasks
 from repro.training.losses import WeightedMean
@@ -45,13 +48,7 @@ def _accumulate(grad_fn: Callable, params, batch, accum_steps: int):
     microbatch of activations plus one f32 grad accumulator, independent
     of K (and therefore of the global batch size).
     """
-    for leaf in jax.tree_util.tree_leaves(batch):
-        if leaf.shape[:1] != (accum_steps,):
-            raise ValueError(
-                f"accum_steps={accum_steps} but a batch leaf has leading "
-                f"dim {leaf.shape[:1]} (shape {leaf.shape}); stack "
-                f"microbatches as [K, B/K, ...] — see "
-                f"data.pipeline.stack_microbatches")
+    hvp_lib.check_stacked(batch, accum_steps)
 
     # shapes only — establishes the metrics-dict structure for the carry
     mb0 = jax.tree_util.tree_map(lambda x: x[0], batch)
@@ -160,13 +157,26 @@ def make_ssl_step(embed_fn: Callable, optimizer: GradientTransform, *,
 def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
         *, recorder: Optional[instrumentation.NormRecorder] = None,
         log_every: int = 0, log_fn: Callable = print,
-        donate: Optional[bool] = None) -> tuple[TrainState, list[dict]]:
+        donate: Optional[bool] = None,
+        sink: Optional["sinks.MetricsSink"] = None,
+        callbacks: Sequence = ()) -> tuple[TrainState, list[dict]]:
     """Host loop used by CPU-scale experiments. ``batches`` yields one
     pytree per *global* step: dict batches (LM) or tuples
     (classifier/SSL args); for an accumulating step the leaves carry the
     stacked ``[K, B/K, ...]`` microbatch axis (see
     ``data.pipeline.stack_microbatches`` / the iterators'
     ``accum_steps=`` knob).
+
+    Metrics stream through one :class:`repro.diagnostics.sink
+    .MetricsSink`: pass ``sink=`` explicitly (JSONL/CSV/...; written
+    every step) or rely on ``log_every``/``log_fn``, which build the
+    default :class:`ConsoleSink` reproducing the historical console
+    line at the same cadence.  ``callbacks`` are
+    :class:`repro.diagnostics.probes.Probe` objects — each runs when
+    ``step % probe.every == 0`` (after the optimizer step, on the
+    *separate* jitted probe computation, so the train step and its
+    2-``pallas_call`` fused invariant are untouched) and its metrics
+    land in the sink under ``{probe.name}/{key}``.
 
     ``donate`` donates the TrainState argument to the jitted step so
     params and optimizer buffers update in place — this is what makes
@@ -177,6 +187,9 @@ def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
         donate = jax.default_backend() in ("tpu", "gpu")
     step_fn = jax.jit(train_step, donate_argnums=(0,)) if donate \
         else jax.jit(train_step)
+    if sink is None:
+        sink = sinks.ConsoleSink(every=log_every, log_fn=log_fn) \
+            if log_every else None
     history: list[dict] = []
     for i in range(num_steps):
         batch = next(batches)
@@ -192,8 +205,15 @@ def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
         host = {k: float(v) if jnp.ndim(v) == 0 else jax.device_get(v)
                 for k, v in metrics.items()}
         history.append(host)
-        if log_every and (i % log_every == 0 or i == num_steps - 1):
-            log_fn(f"step {i:5d} " + " ".join(
-                f"{k}={v:.4f}" for k, v in host.items()
-                if isinstance(v, float)))
+        last = i == num_steps - 1
+        if sink is not None:
+            sink.write(i, host, last=last)
+        for probe in callbacks:
+            if probes_lib.should_run(i, getattr(probe, "every", 1)):
+                out = probe(i, state)
+                if out and sink is not None:
+                    # probe lines always flush (last=True beats the
+                    # console sink's every-N gate)
+                    sink.write(i, {f"{probe.name}/{k}": v
+                                   for k, v in out.items()}, last=True)
     return state, history

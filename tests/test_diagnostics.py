@@ -1,0 +1,482 @@
+"""Sharpness & loss-landscape diagnostics subsystem.
+
+Acceptance gates (ISSUE 3):
+  * flat-substrate HVP == tree-space jvp-of-grad to <= 1e-6;
+  * Lanczos top-k == dense ``jnp.linalg.eigh`` Hessian eigenvalues on
+    a small quadratic AND a tiny MLP to <= 1e-4;
+  * Lanczos λ_max on a K=4 accumulated loss == the K=1 value to
+    <= 1e-5;
+  * probes add ZERO pallas_calls and leave the fused train step's
+    2-``pallas_call`` invariant untouched;
+plus sink/console/CSV behavior, the NormRecorder summary windows, and
+the probe smoke CLI.
+"""
+import json
+import math
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core import build_optimizer, flatten
+from repro.core.instrumentation import LayerNorms, NormRecorder
+from repro.data.pipeline import stack_microbatches
+from repro.data.synthetic import ClassificationData, batch_iterator
+from repro.diagnostics import (GradNoiseProbe, LanczosProbe,
+                               SharpnessProbe, hvp, landscape, probes,
+                               sharpness)
+from repro.diagnostics import sink as sink_lib
+from repro.diagnostics.lanczos import (lanczos, lanczos_top_k,
+                                       spectral_density_stem)
+from repro.kernels.ops import count_pallas_calls
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+from repro.training import Task, TrainState, classifier_task, fit
+from repro.training.trainer import make_train_step
+
+pytestmark = pytest.mark.diagnostics
+
+
+# ----- fixtures -----
+
+def _quadratic(dim: int = 12, seed: int = 0):
+    """Task with loss 0.5 wᵀAw — Hessian is exactly A (SPD)."""
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(dim, dim))
+    a = jnp.asarray(q @ q.T, jnp.float32)
+
+    def loss_fn(params, batch):
+        w = params["w"].astype(jnp.float32)
+        return 0.5 * w @ a @ w, {}
+
+    params = {"w": jnp.asarray(rng.normal(size=(dim,)), jnp.float32)}
+    return Task("quad", loss_fn), params, np.asarray(a), jnp.zeros((1,))
+
+
+def _tiny_mlp(batch_size: int = 16):
+    data = ClassificationData(num_classes=3, image_size=2, seed=0)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=2 * 2 * 3,
+                                 num_classes=3, hidden=8, depth=2)
+    task = classifier_task(apply_mlp_classifier)
+    batch = data.batch(jax.random.PRNGKey(1), batch_size)
+    return task, params, batch, data
+
+
+# ----- HVP on the flat substrate -----
+
+def test_flat_hvp_matches_tree_jvp_of_grad():
+    task, params, batch, _ = _tiny_mlp()
+    spec = flatten.build_spec(params)
+    rng = np.random.default_rng(1)
+    v_tree = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape), jnp.float32),
+        params)
+    op = hvp.make_flat_hvp(task, params, batch)
+    out_flat = flatten.unpack(op.matvec(flatten.pack_tree(v_tree, spec)),
+                              spec)
+    out_tree = jax.tree_util.tree_leaves(
+        hvp.tree_hvp(task, params, batch, v_tree))
+    for a, b in zip(out_flat, out_tree):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_flat_hvp_zero_on_padding_and_dim():
+    task, params, batch, _ = _tiny_mlp()
+    op = hvp.make_flat_hvp(task, params, batch)
+    mask = hvp.padding_mask(op.spec)
+    assert op.dim == sum(int(np.prod(s)) for s in op.spec.shapes)
+    assert float(mask.sum()) == op.dim
+    out = op.matvec(jnp.ones_like(op.w2d))   # pad coords set to 1
+    np.testing.assert_array_equal(np.asarray(out * (1 - mask)), 0.0)
+
+
+def test_flat_hvp_accumulated_matches_single():
+    task, params, batch, _ = _tiny_mlp(batch_size=32)
+    spec = flatten.build_spec(params)
+    v = hvp.padding_mask(spec) * jax.random.normal(
+        jax.random.PRNGKey(2), (spec.num_rows, flatten.LANES))
+    h1 = hvp.make_flat_hvp(task, params, batch).matvec(v)
+    hK = hvp.make_flat_hvp(task, params, stack_microbatches(batch, 4),
+                           accum_steps=4).matvec(v)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(hK),
+                               atol=1e-6)
+
+
+def test_hvp_rejects_unstacked_batch():
+    task, params, batch, _ = _tiny_mlp()
+    with pytest.raises(ValueError, match="accum_steps=4"):
+        hvp.make_flat_hvp(task, params, batch, accum_steps=4)
+    with pytest.raises(ValueError, match=">= 1"):
+        hvp.make_flat_hvp(task, params, batch, accum_steps=0)
+
+
+# ----- Lanczos vs dense eigendecomposition -----
+
+def test_lanczos_quadratic_matches_dense_eigh():
+    task, params, a, batch = _quadratic()
+    op = hvp.make_flat_hvp(task, params, batch)
+    v0 = hvp.padding_mask(op.spec) * jax.random.normal(
+        jax.random.PRNGKey(0), op.w2d.shape)
+    evs = np.asarray(lanczos_top_k(op.matvec, v0, 20, 3))
+    dense = np.asarray(jnp.linalg.eigh(jnp.asarray(a))[0])[::-1][:3]
+    np.testing.assert_allclose(evs, dense, atol=1e-4)
+
+
+def test_lanczos_tiny_mlp_matches_dense_eigh():
+    task, params, batch, _ = _tiny_mlp()
+    theta, unravel = ravel_pytree(params)
+    dense_h = jax.hessian(
+        lambda t: task.loss_fn(unravel(t), batch)[0])(theta)
+    dense = np.asarray(jnp.linalg.eigh(dense_h)[0])[::-1][:3]
+    op = hvp.make_flat_hvp(task, params, batch)
+    v0 = hvp.padding_mask(op.spec) * jax.random.normal(
+        jax.random.PRNGKey(0), op.w2d.shape)
+    evs = np.asarray(lanczos_top_k(op.matvec, v0, 30, 3))
+    np.testing.assert_allclose(evs, dense, atol=1e-4)
+
+
+def test_lanczos_top_eig_accumulated_matches_single():
+    """ISSUE gate: λ_max on a K=4 accumulated loss == K=1 to <= 1e-5."""
+    task, params, batch, _ = _tiny_mlp(batch_size=32)
+    spec = flatten.build_spec(params)
+    v0 = hvp.padding_mask(spec) * jax.random.normal(
+        jax.random.PRNGKey(0), (spec.num_rows, flatten.LANES))
+    op1 = hvp.make_flat_hvp(task, params, batch)
+    opK = hvp.make_flat_hvp(task, params, stack_microbatches(batch, 4),
+                            accum_steps=4)
+    lam1 = float(lanczos_top_k(op1.matvec, v0, 10, 1)[0])
+    lamK = float(lanczos_top_k(opK.matvec, v0, 10, 1)[0])
+    assert abs(lam1 - lamK) <= 1e-5
+
+
+def test_lanczos_breakdown_is_safe():
+    """Operator rank < m: trailing zeros, top eigenvalues still right."""
+    task, params, a, batch = _quadratic(dim=4)
+    op = hvp.make_flat_hvp(task, params, batch)
+    v0 = hvp.padding_mask(op.spec) * jax.random.normal(
+        jax.random.PRNGKey(0), op.w2d.shape)
+    res = lanczos(op.matvec, v0, 12)
+    assert np.all(np.isfinite(np.asarray(res.alphas)))
+    evs = np.asarray(lanczos_top_k(op.matvec, v0, 12, 2))
+    dense = np.asarray(jnp.linalg.eigh(jnp.asarray(a))[0])[::-1][:2]
+    np.testing.assert_allclose(evs, dense, atol=1e-4)
+
+
+def test_spectral_density_stem_weights():
+    task, params, a, batch = _quadratic()
+    op = hvp.make_flat_hvp(task, params, batch)
+    v0 = hvp.padding_mask(op.spec) * jax.random.normal(
+        jax.random.PRNGKey(0), op.w2d.shape)
+    res = lanczos(op.matvec, v0, 12)
+    nodes, weights = spectral_density_stem(res.alphas, res.betas)
+    assert nodes.shape == weights.shape == (12,)
+    np.testing.assert_allclose(float(weights.sum()), 1.0, atol=1e-5)
+
+
+# ----- probe / train-step isolation -----
+
+def test_probes_add_zero_pallas_calls_and_keep_step_invariant():
+    data = ClassificationData(num_classes=4, image_size=8, seed=0)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                                 num_classes=4, hidden=32)
+    opt = build_optimizer("wa-lars", total_steps=10, learning_rate=0.3,
+                          use_kernel="fused")
+    state = TrainState.create(params, opt)
+    task = classifier_task(apply_mlp_classifier)
+    batch = data.batch(jax.random.PRNGKey(1), 8)
+    step = make_train_step(task, opt)
+    assert count_pallas_calls(
+        jax.make_jaxpr(step)(state, *batch).jaxpr) == 2
+
+    # the probe computation itself contains zero pallas_calls
+    probe_batch = data.batch(jax.random.PRNGKey(2), 8)
+    probe = LanczosProbe(task, probe_batch, every=1, num_iters=3)
+    probe_jaxpr = jax.make_jaxpr(probe._build())(state.params)
+    assert count_pallas_calls(probe_jaxpr.jaxpr) == 0
+
+    # running the probe does not perturb the compiled train step
+    out = probe(0, state)
+    assert math.isfinite(out["lambda_max"])
+    assert count_pallas_calls(
+        jax.make_jaxpr(step)(state, *batch).jaxpr) == 2
+
+
+# ----- SAM sharpness + gradient noise scale -----
+
+def test_sam_sharpness_quadratic_closed_form():
+    """For loss 0.5 wᵀAw: g = Aw and sharpness has the closed form
+    ρ·‖g‖ + 0.5·ρ²·ĝᵀAĝ with ĝ = g/‖g‖."""
+    task, params, a, batch = _quadratic()
+    rho = 0.1
+    out = sharpness.sam_sharpness(task, params, batch, rho=rho)
+    w = np.asarray(params["w"], np.float64)
+    g = np.asarray(a, np.float64) @ w
+    ghat = g / np.linalg.norm(g)
+    expected = rho * np.linalg.norm(g) + 0.5 * rho ** 2 * ghat @ a @ ghat
+    np.testing.assert_allclose(float(out["sam_sharpness"]), expected,
+                               rtol=1e-4)
+    assert float(out["perturbed_loss"]) > float(out["loss"])
+
+
+def test_sam_sharpness_accumulated_matches_single():
+    task, params, batch, _ = _tiny_mlp(batch_size=32)
+    s1 = sharpness.sam_sharpness(task, params, batch)
+    sK = sharpness.sam_sharpness(task, params,
+                                 stack_microbatches(batch, 4),
+                                 accum_steps=4)
+    np.testing.assert_allclose(float(s1["sam_sharpness"]),
+                               float(sK["sam_sharpness"]), atol=1e-5)
+
+
+def test_grad_noise_scale_tiled_is_zero():
+    """K identical microbatches => per-microbatch grads coincide with
+    the mean => tr(Σ) estimate and noise scale are 0."""
+    task, params, batch, _ = _tiny_mlp(batch_size=8)
+    images, labels = batch
+    tiled = (jnp.tile(images, (4, 1, 1, 1)), jnp.tile(labels, (4,)))
+    out = sharpness.gradient_noise_scale(
+        task, params, stack_microbatches(tiled, 4), accum_steps=4)
+    np.testing.assert_allclose(float(out["trace_cov"]), 0.0, atol=1e-6)
+    np.testing.assert_allclose(float(out["grad_noise_scale"]), 0.0,
+                               atol=1e-4)
+
+
+def test_grad_noise_scale_distinct_is_positive():
+    task, params, batch, _ = _tiny_mlp(batch_size=32)
+    out = sharpness.gradient_noise_scale(
+        task, params, stack_microbatches(batch, 4), accum_steps=4)
+    assert float(out["trace_cov"]) > 0.0
+    assert float(out["grad_noise_scale"]) > 0.0
+    with pytest.raises(ValueError, match=">= 2"):
+        sharpness.gradient_noise_scale(task, params, batch,
+                                       accum_steps=1)
+
+
+# ----- landscape slices -----
+
+def test_loss_slice_1d_quadratic_closed_form():
+    task, params, a, batch = _quadratic()
+    d = {"w": jnp.ones_like(params["w"])}
+    alphas = jnp.asarray([-1.0, 0.0, 0.5, 1.0])
+    losses = np.asarray(landscape.loss_slice_1d(task, params, d, batch,
+                                                alphas))
+    w = np.asarray(params["w"], np.float64)
+    dv = np.ones_like(w)
+    a64 = np.asarray(a, np.float64)
+    expected = [0.5 * (w + al * dv) @ a64 @ (w + al * dv)
+                for al in np.asarray(alphas)]
+    np.testing.assert_allclose(losses, expected, rtol=1e-4)
+
+
+def test_loss_slice_2d_shape_and_center():
+    task, params, batch, _ = _tiny_mlp()
+    key = jax.random.PRNGKey(3)
+    d1 = landscape.filter_normalized_direction(key, params)
+    d2 = landscape.filter_normalized_direction(
+        jax.random.fold_in(key, 1), params)
+    alphas = jnp.linspace(-0.5, 0.5, 3)
+    grid = landscape.loss_slice_2d(task, params, d1, d2, batch,
+                                   alphas, alphas)
+    assert grid.shape == (3, 3)
+    base = float(task.loss_fn(params, batch)[0])
+    np.testing.assert_allclose(float(grid[1, 1]), base, rtol=1e-5)
+
+
+def test_filter_normalized_direction_matches_filter_norms():
+    _, params, _, _ = _tiny_mlp()
+    d = landscape.filter_normalized_direction(jax.random.PRNGKey(0),
+                                              params)
+    w = params["fc0"]["w"]
+    dn = np.linalg.norm(np.asarray(d["fc0"]["w"]), axis=0)
+    wn = np.linalg.norm(np.asarray(w, np.float32), axis=0)
+    np.testing.assert_allclose(dn, wn, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(d["fc0"]["b"])),
+        np.linalg.norm(np.asarray(params["fc0"]["b"], np.float32)),
+        atol=1e-6)
+
+
+def test_direction_between_checkpoints():
+    _, params, _, _ = _tiny_mlp()
+    moved = jax.tree_util.tree_map(lambda p: p + 1.0, params)
+    d = landscape.direction_between(params, moved)
+    for leaf in jax.tree_util.tree_leaves(d):
+        np.testing.assert_allclose(np.asarray(leaf), 1.0, atol=1e-6)
+
+
+# ----- sinks + fit wiring -----
+
+def test_console_sink_reproduces_legacy_fit_output():
+    task, params, batch, data = _tiny_mlp()
+    opt = build_optimizer("sgd", total_steps=4, learning_rate=0.1)
+    state = TrainState.create(params, opt)
+    lines = []
+    _, hist = fit(make_train_step(task, opt), state,
+                  batch_iterator(data, 16), 4, log_every=2,
+                  log_fn=lines.append)
+    expected = [
+        f"step {i:5d} " + " ".join(
+            f"{k}={v:.4f}" for k, v in h.items()
+            if isinstance(v, float))
+        for i, h in enumerate(hist) if i % 2 == 0 or i == 3]
+    assert lines == expected
+
+
+def test_fit_sink_and_probe_callbacks_jsonl():
+    task, params, batch, data = _tiny_mlp()
+    opt = build_optimizer("tvlars", total_steps=4, learning_rate=0.3)
+    state = TrainState.create(params, opt)
+    probe_batch = data.batch(jax.random.PRNGKey(9), 8)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "m.jsonl")
+        with sink_lib.JsonlSink(path, static={"tag": "t"}) as sink:
+            fit(make_train_step(task, opt), state,
+                batch_iterator(data, 16), 4, sink=sink,
+                callbacks=[
+                    LanczosProbe(task, probe_batch, every=2,
+                                 num_iters=2),
+                    SharpnessProbe(task, probe_batch, every=4),
+                ])
+        assert sink_lib.validate_jsonl(path) == 4 + 2 + 1
+        recs = [json.loads(line) for line in open(path)]
+        assert all(r["tag"] == "t" for r in recs)
+        lam = [r for r in recs if "lanczos/lambda_max" in r]
+        assert [r["step"] for r in lam] == [0, 2]
+        sam = [r for r in recs if "sharpness/sam_sharpness" in r]
+        assert [r["step"] for r in sam] == [0]
+        train = [r for r in recs if "loss" in r]
+        assert [r["step"] for r in train] == [0, 1, 2, 3]
+
+
+def test_gradnoise_probe_requires_stacked_batch():
+    task, params, batch, _ = _tiny_mlp()
+    with pytest.raises(ValueError, match=">= 2"):
+        GradNoiseProbe(task, batch, accum_steps=1)
+    stacked = stack_microbatches(batch, 4)
+    probe = GradNoiseProbe(task, stacked, accum_steps=4, every=1)
+    opt = build_optimizer("sgd", total_steps=2, learning_rate=0.1)
+    out = probe(0, TrainState.create(params, opt))
+    assert math.isfinite(out["grad_noise_scale"])
+
+
+def test_probe_schedule():
+    assert probes.should_run(0, 5)
+    assert probes.should_run(10, 5)
+    assert not probes.should_run(3, 5)
+    assert not probes.should_run(0, 0)
+
+
+def test_csv_sink_and_export_recorder():
+    rec = NormRecorder({"w": jnp.ones((2, 2))})
+    for i in range(3):
+        rec.record(i, LayerNorms(lwn=jnp.asarray([1.0 + i]),
+                                 lgn=jnp.asarray([2.0]),
+                                 lnr=jnp.asarray([0.5 + i])))
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "t.csv")
+        with sink_lib.CsvSink(path, fieldnames=["step", "opt", "lwn",
+                                                "lgn", "lnr"]) as sink:
+            n = sink_lib.export_recorder(rec, sink,
+                                         extra={"opt": "tvlars"})
+        assert n == 3
+        rows = open(path).read().strip().splitlines()
+        assert rows[0] == "step,opt,lwn,lgn,lnr"
+        assert rows[1].startswith("0,tvlars,1.0,2.0,0.5")
+        assert len(rows) == 4
+
+
+def test_jsonl_validation_rejects_bad_schema():
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "bad.jsonl")
+        with open(path, "w") as f:
+            f.write('{"no_step": 1}\n')
+        with pytest.raises(ValueError, match="step"):
+            sink_lib.validate_jsonl(path)
+        with open(path, "w") as f:
+            f.write("not json\n")
+        with pytest.raises(ValueError, match="not valid JSON"):
+            sink_lib.validate_jsonl(path)
+
+
+def test_jsonl_sink_truncates_and_encodes_nonfinite_as_null():
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "m.jsonl")
+        with sink_lib.JsonlSink(path) as sink:
+            sink.write(0, {"stale": 1.0})
+        # a re-run with the same path must not interleave old records
+        with sink_lib.JsonlSink(path) as sink:
+            sink.write(0, {"loss": float("nan"),
+                           "lam": float("inf")})
+        lines = open(path).read().strip().splitlines()
+        assert len(lines) == 1
+        assert "NaN" not in lines[0] and "Infinity" not in lines[0]
+        rec = json.loads(lines[0])
+        assert rec["loss"] is None and rec["lam"] is None
+        assert sink_lib.validate_jsonl(path) == 1
+        with pytest.raises(ValueError, match="mode"):
+            sink_lib.JsonlSink(path, mode="x")
+        # explicit append mode is still available
+        with sink_lib.JsonlSink(path, mode="a") as sink:
+            sink.write(1, {"loss": 2.0})
+        assert sink_lib.validate_jsonl(path) == 2
+
+
+def test_csv_sink_rejects_disjoint_rows():
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "t.csv")
+        with sink_lib.CsvSink(path) as sink:
+            sink.write(0, {"loss": 1.0})
+            with pytest.raises(ValueError, match="JsonlSink"):
+                sink.write(0, {"lanczos/lambda_max": 3.0})
+
+
+def test_multi_and_null_sinks():
+    got = []
+
+    class ListSink(sink_lib.MetricsSink):
+        def write(self, step, metrics, *, last=False):
+            got.append((step, dict(metrics)))
+
+    multi = sink_lib.MultiSink(ListSink(), sink_lib.NullSink())
+    multi.write(3, {"a": 1.0})
+    multi.close()
+    assert got == [(3, {"a": 1.0})]
+
+
+# ----- NormRecorder summary windows (satellite) -----
+
+def test_summary_windows_symmetric_and_short_run_safe():
+    for n in (1, 2, 3, 4, 5, 10, 80):
+        rec = NormRecorder({"w": jnp.ones((2,))})
+        for i in range(n):
+            rec.record(i, LayerNorms(lwn=jnp.asarray([1.0]),
+                                     lgn=jnp.asarray([1.0]),
+                                     lnr=jnp.asarray([2.0])))
+        s = rec.summary()
+        win = NormRecorder.summary_window(n)
+        assert s["window"] == win
+        assert 1 <= win <= max(1, n // 2) or n == 1
+        if n >= 2:
+            assert 2 * win <= n     # head/tail disjoint
+        # constant trace: symmetric windows => exactly zero decline
+        assert s["lnr_decline"] == 0.0
+        assert all(math.isfinite(v) for v in s.values())
+
+
+def test_summary_window_matches_legacy_for_long_runs():
+    # the n//5 rule is unchanged where it was already well-defined
+    for n in (10, 25, 80, 100):
+        assert NormRecorder.summary_window(n) == max(1, n // 5)
+
+
+# ----- smoke CLI (what tools/check.sh runs) -----
+
+def test_probe_smoke_cli_runs_and_validates():
+    from repro.diagnostics import smoke
+    with tempfile.TemporaryDirectory() as td:
+        path = smoke.run(td, steps=2, probe_every=2, num_iters=2)
+        assert sink_lib.validate_jsonl(path) >= 2

@@ -24,4 +24,7 @@ echo "== e2e launcher smoke (gradient accumulation K=4) =="
 python -m repro.launch.train --smoke --steps 2 --seq 64 \
     --global-batch 8 --microbatch 2 --log-every 1
 
+echo "== diagnostics probe smoke (tiny MLP, 2 Lanczos iters, JSONL schema) =="
+python -m repro.diagnostics.smoke
+
 echo "check: OK"
