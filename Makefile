@@ -1,12 +1,21 @@
-.PHONY: check test bench smoke
+.PHONY: check test fast bench smoke lint
 
 # tier-1 suite + REPRO_FORCE_REF=1 oracle re-run (both dispatch modes)
-# + e2e launcher smoke with gradient accumulation (K>1)
+# + e2e launcher smoke with gradient accumulation (K>1) + probe smoke
+# + lint + JSONL metrics-contract guard — mirrors the CI full job
 check:
 	sh tools/check.sh
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# CI fast lane: everything not marked slow / diagnostics
+fast:
+	PYTHONPATH=src python -m pytest -q -m "not slow and not diagnostics"
+
+# ruff lint (config in pyproject.toml); CI fails on findings
+lint:
+	ruff check .
 
 bench:
 	PYTHONPATH=src:. python benchmarks/bench_kernels.py

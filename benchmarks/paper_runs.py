@@ -6,8 +6,6 @@ to 1024 standing in for the paper's 512..16K ladder.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -15,7 +13,6 @@ from repro.core import NormRecorder, build_optimizer
 from repro.data.synthetic import (ClassificationData, batch_iterator,
                                   two_view_batch)
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
-from repro.training.losses import barlow_twins_loss
 from repro.training.train_state import TrainState
 from repro.training.trainer import (fit, make_classifier_step,
                                     make_ssl_step)

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV lines; full grids land in
   fig2          Figure 2: LWN/LGN/LNR traces (WA/NOWA-LARS, TVLARS)
   ablations     §5.2: λ sweep (Fig 5), target LR (Fig 6), init (Fig 7)
   sharpness     λ_max(H) early-phase trajectory (WA-LARS vs TVLARS)
+  adaptive      noise-scale-driven batch controller vs fixed-B baselines
   kernels       Pallas kernel micro-benchmarks
   roofline      §Roofline terms from the dry-run artifacts
 
@@ -20,7 +21,7 @@ import sys
 import time
 
 SUITES = ("schedules", "kernels", "roofline", "fig2", "table1",
-          "ablations", "ssl", "sharpness")
+          "ablations", "ssl", "sharpness", "adaptive")
 
 
 def run_suite(name: str) -> None:
@@ -40,6 +41,8 @@ def run_suite(name: str) -> None:
         from benchmarks import bench_kernels as mod
     elif name == "sharpness":
         from benchmarks import bench_sharpness as mod
+    elif name == "adaptive":
+        from benchmarks import bench_adaptive_batch as mod
     elif name == "roofline":
         from benchmarks import bench_roofline as mod
     else:

@@ -3,7 +3,6 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import build_optimizer

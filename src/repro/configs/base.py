@@ -54,7 +54,7 @@ class ModelConfig:
 
     # attention pattern
     sliding_window: Optional[int] = None   # window for local layers
-    global_every: int = 0              # gemma3: 1 global per N layers (0=all global)
+    global_every: int = 0          # gemma3: 1 global per N (0=all global)
 
     # MoE
     num_experts: int = 0
@@ -87,7 +87,8 @@ class ModelConfig:
     # ----- derived -----
     @property
     def head_dim_(self) -> int:
-        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+        return self.head_dim if self.head_dim \
+            else self.d_model // self.num_heads
 
     @property
     def ssm_d_inner(self) -> int:
@@ -126,9 +127,7 @@ class ModelConfig:
         n = self.num_layers * per + v * d + d
         if self.family == "hybrid":
             per_m = self._mamba_block_params()
-            n_attn_uses = self.num_layers // max(self.attn_every, 1)
             n = self.num_layers * per_m + (att + 2 * d) + v * d + d
-            del n_attn_uses
         if self.family == "encdec":
             enc_per = att + mlp + 2 * d
             dec_per = 2 * att + mlp + 3 * d   # self + cross

@@ -11,8 +11,6 @@ recorded reason.
 from __future__ import annotations
 
 import importlib
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

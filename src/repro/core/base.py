@@ -117,7 +117,8 @@ def trace(decay: float, nesterov: bool = False) -> GradientTransform:
         m = jax.tree_util.tree_map(
             lambda g, m: decay * m + g, grads, state.momentum)
         if nesterov:
-            out = jax.tree_util.tree_map(lambda g, m_: g + decay * m_, grads, m)
+            out = jax.tree_util.tree_map(
+                lambda g, m_: g + decay * m_, grads, m)
         else:
             out = m
         return out, TraceState(momentum=m)

@@ -128,8 +128,9 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
             return (jax.tree_util.tree_map(
                 lambda p: jnp.array(p, dtype=jnp.float32, copy=True),
                 params),)
-        zeros = lambda: jax.tree_util.tree_map(
-            lambda p: jnp.zeros_like(p, jnp.float32), params)
+        def zeros():
+            return jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
         return tuple(zeros() for _ in range(n_bufs))
 
     def init(params):
@@ -200,7 +201,8 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
 
         out = jax.tree_util.tree_map(per_leaf, grads, params,
                                      *state[1:], lab)
-        is_out = lambda x: isinstance(x, tuple)
+        def is_out(x):
+            return isinstance(x, tuple)
         new_bufs = tuple(
             jax.tree_util.tree_map(lambda o, k=k: o[k], out, is_leaf=is_out)
             for k in range(n_bufs))

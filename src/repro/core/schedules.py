@@ -18,7 +18,7 @@ The paper's schedules:
 from __future__ import annotations
 
 import math
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
@@ -92,8 +92,9 @@ def sqrt_scaling(base_lr: float, batch_size: int, base_batch_size: int
 BATCH_SCALING_RULES = ("sqrt", "linear")
 
 
-def batch_scaled_lr(base_lr: float, batch_size: int, base_batch_size: int,
-                    rule: str = "sqrt") -> float:
+def batch_scaled_lr(base_lr: float, batch_size: Optional[int] = None,
+                    base_batch_size: int = 256, rule: str = "sqrt", *,
+                    batch_size_fn: Optional[Callable[[], int]] = None):
     """Batch-size LR scaling by named rule — the one entry point the
     optimizer factory uses.
 
@@ -102,7 +103,26 @@ def batch_scaled_lr(base_lr: float, batch_size: int, base_batch_size: int,
     Feeding a per-device or per-microbatch size here silently under-
     scales the LR (and TVLARS's γ_min), which is exactly the class of
     bug the launcher's old ``batch·seq//128`` heuristic caused.
+
+    Two call styles:
+
+    * ``batch_scaled_lr(lr, B, B_base, rule)`` — the static path:
+      returns the scaled LR float for a fixed global batch.
+    * ``batch_scaled_lr(lr, base_batch_size=B_base, rule=rule,
+      batch_size_fn=...)`` — the *stateful* path used by the adaptive
+      batch-size controller: returns a zero-arg callable that re-reads
+      the current global batch from ``batch_size_fn`` on every call, so
+      the LR always reflects the batch the controller has retargeted to.
+      The controller evaluates it once per compiled-step build (one per
+      visited K), which bakes the correct constant into that K's step.
     """
+    if (batch_size is None) == (batch_size_fn is None):
+        raise ValueError(
+            "pass exactly one of batch_size (static) or batch_size_fn "
+            "(stateful)")
+    if batch_size_fn is not None:
+        return lambda: batch_scaled_lr(base_lr, int(batch_size_fn()),
+                                       base_batch_size, rule)
     if rule == "sqrt":
         return sqrt_scaling(base_lr, batch_size, base_batch_size)
     if rule == "linear":

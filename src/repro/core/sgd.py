@@ -38,7 +38,8 @@ def sgd(learning_rate: Schedule, *, momentum: float = 0.9,
             return new_m, -lr * step_dir
 
         out = jax.tree_util.tree_map(per_leaf, grads, params, state.momentum)
-        is_pair = lambda x: isinstance(x, tuple)
+        def is_pair(x):
+            return isinstance(x, tuple)
         new_m = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
         updates = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_pair)
         return updates, SgdState(step=state.step + 1, momentum=new_m)

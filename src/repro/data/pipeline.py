@@ -72,7 +72,69 @@ def sharded_iterator(mesh: Mesh, host_iter: Iterator, *,
         yield shard_batch(mesh, batch, batch_dim=batch_dim)
 
 
+class MicrobatchedStream:
+    """Microbatched batch stream whose ``accum_steps`` K can be
+    retargeted mid-stream — the adaptive batch-size controller's
+    re-stack boundary.
+
+    ``source`` is a *sample-level* provider ``(start, count) -> batch
+    pytree`` with ``count`` leading-dim samples; sample ``i`` must
+    depend only on ``i`` (see ``data.synthetic.*_sample_source``).
+    Each ``next()`` consumes the next ``K × microbatch`` contiguous
+    samples and advances ``position`` by exactly that — so changing K
+    preserves the epoch position: no sample is skipped or re-read, and
+    a fresh stream started at the same ``position`` sees the identical
+    upcoming samples regardless of how earlier samples were partitioned
+    (the basis of the controller's K-switch parity test).
+
+    Yields ``[K, microbatch, ...]`` stacked leaves for K > 1 and plain
+    ``[microbatch, ...]`` leaves for K = 1, matching what
+    ``make_train_step(accum_steps=K)`` expects in each regime.
+    """
+
+    def __init__(self, source, microbatch: int, accum_steps: int = 1,
+                 *, position: int = 0):
+        if microbatch < 1:
+            raise ValueError(f"microbatch must be >= 1, got {microbatch}")
+        self.source = source
+        self.microbatch = microbatch
+        self.position = position
+        self._k = 0
+        self.set_accum_steps(accum_steps)
+
+    @property
+    def accum_steps(self) -> int:
+        return self._k
+
+    @property
+    def global_batch(self) -> int:
+        return self._k * self.microbatch
+
+    def set_accum_steps(self, accum_steps: int) -> None:
+        """Retarget K; takes effect from the next ``next()``."""
+        if accum_steps < 1:
+            raise ValueError(
+                f"accum_steps must be >= 1, got {accum_steps}")
+        self._k = int(accum_steps)
+
+    def __iter__(self) -> "MicrobatchedStream":
+        return self
+
+    def __next__(self):
+        n = self._k * self.microbatch
+        batch = self.source(self.position, n)
+        self.position += n
+        if self._k == 1:
+            return batch
+        return stack_microbatches(batch, self._k)
+
+
 def microbatched_iterator(host_iter: Iterator, accum_steps: int) -> Iterator:
-    """Wrap a global-batch stream into stacked microbatch pytrees."""
+    """Wrap a global-batch stream into stacked microbatch pytrees.
+
+    Fixed-K convenience: for a stream whose K must change mid-run (the
+    adaptive controller), build a :class:`MicrobatchedStream` from a
+    sample-level source instead.
+    """
     for batch in host_iter:
         yield stack_microbatches(batch, accum_steps)

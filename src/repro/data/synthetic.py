@@ -96,6 +96,47 @@ def lm_batch(key, batch_size: int, seq_len: int, vocab: int
     return tokens, labels
 
 
+def _per_sample_keys(seed: int, start: int, count: int) -> jnp.ndarray:
+    """One PRNG key per absolute sample index — sample ``i`` depends
+    only on ``i``, never on how the stream was batched around it."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(
+        jnp.arange(start, start + count))
+
+
+def classification_sample_source(data: ClassificationData, seed: int = 0):
+    """Sample-level source ``(start, count) -> (images, labels)`` for
+    :class:`repro.data.pipeline.MicrobatchedStream`.
+
+    Unlike ``batch_iterator`` (one key per *batch index*), every sample
+    is generated from its own absolute index, so any contiguous
+    ``[start, start + count)`` request returns the same samples no
+    matter how the surrounding stream was partitioned — the property
+    that makes mid-stream batch-size changes position-preserving.
+    """
+
+    def source(start: int, count: int):
+        keys = _per_sample_keys(seed, start, count)
+        images, labels = jax.vmap(lambda k: data.batch(k, 1))(keys)
+        return images[:, 0], labels[:, 0]
+
+    return source
+
+
+def lm_sample_source(seq_len: int, vocab: int, seed: int = 0):
+    """Sample-level LM dict source (``{"tokens", "labels"}``) with the
+    same per-absolute-index determinism as
+    :func:`classification_sample_source`."""
+
+    def source(start: int, count: int):
+        keys = _per_sample_keys(seed, start, count)
+        toks, labels = jax.vmap(lambda k: lm_batch(k, 1, seq_len, vocab))(
+            keys)
+        return {"tokens": toks[:, 0], "labels": labels[:, 0]}
+
+    return source
+
+
 def _maybe_microbatched(stream: Iterator, accum_steps: int) -> Iterator:
     """Stack a global-batch stream to ``[K, B/K, ...]`` when K>1.
 

@@ -28,12 +28,14 @@ from repro.diagnostics.probes import (GradNoiseProbe, LanczosProbe,
                                       Probe, SharpnessProbe, should_run)
 from repro.diagnostics.sharpness import gradient_noise_scale, sam_sharpness
 from repro.diagnostics.sink import (ConsoleSink, CsvSink, JsonlSink,
-                                    MetricsSink, MultiSink, NullSink,
-                                    export_recorder, validate_jsonl)
+                                    MemorySink, MetricsSink, MultiSink,
+                                    NullSink, export_recorder,
+                                    validate_jsonl)
 
 __all__ = [
     "ConsoleSink", "CsvSink", "FlatHVP", "GradNoiseProbe", "JsonlSink",
-    "LanczosProbe", "LanczosResult", "MetricsSink", "MultiSink",
+    "LanczosProbe", "LanczosResult", "MemorySink", "MetricsSink",
+    "MultiSink",
     "NullSink", "Probe", "SharpnessProbe", "direction_between",
     "export_recorder", "filter_normalized_direction",
     "gradient_noise_scale", "lanczos_top_k", "loss_slice_1d",

@@ -12,6 +12,8 @@ sink decides the representation:
   probe trace (schema checked by :func:`validate_jsonl`);
 * :class:`CsvSink` — header from the first row, for flat tables like
   the Fig. 2 LNR traces;
+* :class:`MemorySink` — in-memory record list, for tests and the
+  adaptive-batch controller's feedback assertions;
 * :class:`MultiSink` — fan-out to several sinks.
 
 :func:`export_recorder` streams a ``NormRecorder``'s per-step
@@ -77,6 +79,24 @@ class NullSink(MetricsSink):
     def write(self, step: int, metrics: Metrics, *,
               last: bool = False) -> None:
         pass
+
+
+class MemorySink(MetricsSink):
+    """In-memory record list (``{"step": int, **metrics}`` per write) —
+    inspect the exact stream a file sink would have received without
+    touching disk (see ``tests/test_controller.py``)."""
+
+    def __init__(self):
+        self.records: list[dict] = []
+
+    def write(self, step: int, metrics: Metrics, *,
+              last: bool = False) -> None:
+        self.records.append({"step": int(step),
+                             **{k: _jsonify(v) for k, v in metrics.items()}})
+
+    def by_key(self, key: str) -> list[tuple[int, Any]]:
+        """``(step, value)`` pairs of the records carrying ``key``."""
+        return [(r["step"], r[key]) for r in self.records if key in r]
 
 
 class ConsoleSink(MetricsSink):

@@ -33,7 +33,6 @@ import traceback
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (ARCH_IDS, INPUT_SHAPES, get_config, input_specs,
                            supports_shape)

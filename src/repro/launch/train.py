@@ -19,6 +19,13 @@ separate jitted computation — the train step and its 2-``pallas_call``
 invariant are untouched); ``--metrics-out`` streams every step's
 metrics plus the probe trace to JSONL.
 
+Adaptive batch size (``--adaptive-batch``): a gradient-noise-scale
+probe closes the loop — every ``--controller-every`` steps the
+McCandlish B_noise estimate retargets the global batch by changing K
+at fixed ``--microbatch`` (peak memory never moves), clamped to
+``[--batch-min, --batch-max]``, with the LR re-scaled to the current
+batch; decisions stream as ``controller/*`` metrics.
+
 Usage:
   python -m repro.launch.train --arch qwen2.5-3b --smoke \
       --optimizer tvlars --steps 20 --global-batch 8 --microbatch 2 \
@@ -36,7 +43,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core import build_optimizer
 from repro.data import pipeline
-from repro.data.synthetic import lm_batch
+from repro.data.synthetic import lm_batch, lm_sample_source
 from repro.diagnostics import probes
 from repro.diagnostics import sink as diag_sink
 from repro.launch import sharding
@@ -44,6 +51,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import extra_embed_shape, get_model
 from repro.models import layers as layers_lib
 from repro.training import tasks
+from repro.training.controller import (AdaptiveBatchController,
+                                       ControllerConfig)
 from repro.training.train_state import TrainState
 from repro.training.trainer import make_train_step
 
@@ -84,6 +93,20 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None,
                     help="stream per-step metrics + probe results to "
                          "this JSONL file (see repro.diagnostics.sink)")
+    ap.add_argument("--adaptive-batch", action="store_true",
+                    help="close the loop: a gradient-noise-scale probe "
+                         "retargets the global batch (accum_steps K at "
+                         "fixed --microbatch) every --controller-every "
+                         "steps, with the LR re-scaled to the current "
+                         "batch (see repro.training.controller)")
+    ap.add_argument("--batch-min", type=int, default=None,
+                    help="adaptive-batch lower clamp on the global "
+                         "batch (default: --microbatch)")
+    ap.add_argument("--batch-max", type=int, default=None,
+                    help="adaptive-batch upper clamp on the global "
+                         "batch (default: 4x the starting global batch)")
+    ap.add_argument("--controller-every", type=int, default=5,
+                    help="adaptive-batch decision cadence in steps")
     args = ap.parse_args()
 
     global_batch = args.global_batch if args.global_batch is not None \
@@ -105,11 +128,59 @@ def main() -> None:
     model = get_model(cfg)
     mesh = make_host_mesh(args.data_parallel, args.model_parallel)
 
-    # schedules/γ_min see the TRUE global batch (samples per optimizer
-    # step), not a token-count heuristic
-    opt = build_optimizer(args.optimizer, total_steps=args.steps,
-                          learning_rate=args.learning_rate,
-                          batch_size=global_batch)
+    def optimizer_for(batch_size: int):
+        # schedules/γ_min see the TRUE global batch (samples per
+        # optimizer step), not a token-count heuristic
+        return build_optimizer(args.optimizer, total_steps=args.steps,
+                               learning_rate=args.learning_rate,
+                               batch_size=batch_size)
+
+    controller = None
+    if args.adaptive_batch:
+        if mesh.size > 1:
+            raise SystemExit(
+                "--adaptive-batch runs on the (1,1) single-host mesh; "
+                "mid-stream re-stacking does not yet compose with "
+                "multi-device shardings")
+        batch_min = args.batch_min if args.batch_min is not None \
+            else microbatch
+        batch_max = args.batch_max if args.batch_max is not None \
+            else 4 * global_batch
+        try:
+            ccfg = ControllerConfig(microbatch=microbatch,
+                                    batch_min=batch_min,
+                                    batch_max=batch_max,
+                                    every=args.controller_every)
+        except ValueError as e:
+            raise SystemExit(f"--adaptive-batch: {e}") from e
+        # held GNS probe batch: stacked at K >= 2 (the estimator
+        # contrasts per-microbatch vs accumulated gradient norms)
+        k_probe = max(2, accum_steps)
+        ptoks, plabels = lm_batch(jax.random.PRNGKey(998),
+                                  k_probe * microbatch, args.seq,
+                                  cfg.vocab_size)
+        gns_batch = {"tokens": ptoks, "labels": plabels}
+        es_probe = extra_embed_shape(cfg, k_probe * microbatch)
+        if es_probe is not None:
+            gns_batch["extra_embeds"] = jnp.zeros(es_probe, cfg.cdtype)
+        gns_batch = pipeline.stack_microbatches(gns_batch, k_probe)
+        try:
+            controller = AdaptiveBatchController(
+                lambda opt_, k: make_train_step(model, opt_,
+                                                accum_steps=k),
+                optimizer_for,
+                probes.GradNoiseProbe(tasks.lm_task(model), gns_batch,
+                                      accum_steps=k_probe,
+                                      every=args.controller_every),
+                ccfg, init_batch=global_batch,
+                base_lr=args.learning_rate,
+                # same donation policy as the fixed path / trainer.fit
+                donate=jax.default_backend() in ("tpu", "gpu"))
+        except ValueError as e:
+            raise SystemExit(f"--adaptive-batch: {e}") from e
+
+    opt = controller.optimizer() if controller is not None \
+        else optimizer_for(global_batch)
     rng = jax.random.PRNGKey(0)
 
     with mesh:
@@ -122,20 +193,38 @@ def main() -> None:
             mesh, sharding.state_pspecs(
                 mesh, jax.eval_shape(lambda: state), fsdp=True))
         state = jax.device_put(state, state_sh)
-        step_fn = jax.jit(make_train_step(model, opt,
-                                          accum_steps=accum_steps),
-                          in_shardings=(state_sh, None),
-                          donate_argnums=(0,))
+        stream = None
+        if controller is not None:
+            # sample-level source: position-preserving across K switches
+            base_src = lm_sample_source(args.seq, cfg.vocab_size)
+
+            def sample_src(start, count):
+                b = base_src(start, count)
+                es_b = extra_embed_shape(cfg, count)
+                if es_b is not None:
+                    b["extra_embeds"] = jnp.zeros(es_b, cfg.cdtype)
+                return b
+
+            stream = pipeline.MicrobatchedStream(sample_src, microbatch,
+                                                 accum_steps=accum_steps)
+            controller.attach(stream)
+            step_fn = None
+        else:
+            step_fn = jax.jit(make_train_step(model, opt,
+                                              accum_steps=accum_steps),
+                              in_shardings=(state_sh, None),
+                              donate_argnums=(0,))
 
         es = extra_embed_shape(cfg, global_batch)
         batch_dim = 1 if accum_steps > 1 else 0
         print(f"global_batch={global_batch} microbatch={microbatch} "
               f"accum_steps={accum_steps} mesh={tuple(mesh.shape.items())}")
 
-        sink = diag_sink.JsonlSink(
-            args.metrics_out,
-            static={"arch": args.arch, "optimizer": args.optimizer,
-                    "global_batch": global_batch}) \
+        static = {"arch": args.arch, "optimizer": args.optimizer}
+        if controller is None:
+            # adaptive runs carry the CURRENT batch per record instead
+            static["global_batch"] = global_batch
+        sink = diag_sink.JsonlSink(args.metrics_out, static=static) \
             if args.metrics_out else None
         probe = None
         if args.probe_every > 0:
@@ -157,20 +246,30 @@ def main() -> None:
 
         t0 = time.time()
         for i in range(args.steps):
-            toks, labels = lm_batch(jax.random.fold_in(rng, i), global_batch,
-                                    args.seq, cfg.vocab_size)
-            batch = {"tokens": toks, "labels": labels}
-            if es is not None:
-                batch["extra_embeds"] = jnp.zeros(es, cfg.cdtype)
-            if accum_steps > 1:
-                batch = pipeline.stack_microbatches(batch, accum_steps)
-            if mesh.size > 1:
-                batch = pipeline.shard_batch(mesh, batch,
-                                             batch_dim=batch_dim)
-            state, metrics = step_fn(state, batch)
+            if controller is not None:
+                # the batch pulled now trains at the CURRENT target;
+                # retargets only land after this step's probe boundary
+                step_batch_size = controller.global_batch
+                batch = next(stream)
+                state, metrics = controller.step_fn()(state, batch)
+            else:
+                toks, labels = lm_batch(jax.random.fold_in(rng, i),
+                                        global_batch, args.seq,
+                                        cfg.vocab_size)
+                batch = {"tokens": toks, "labels": labels}
+                if es is not None:
+                    batch["extra_embeds"] = jnp.zeros(es, cfg.cdtype)
+                if accum_steps > 1:
+                    batch = pipeline.stack_microbatches(batch, accum_steps)
+                if mesh.size > 1:
+                    batch = pipeline.shard_batch(mesh, batch,
+                                                 batch_dim=batch_dim)
+                state, metrics = step_fn(state, batch)
             last = i == args.steps - 1
             host = {k: float(v) for k, v in metrics.items()
                     if jnp.ndim(v) == 0}
+            if controller is not None:
+                host["global_batch"] = float(step_batch_size)
             if sink is not None:
                 sink.write(i, host, last=last)
             if i % args.log_every == 0 or last:
@@ -185,6 +284,18 @@ def main() -> None:
                                    for k, v in out.items()}, last=True)
                 print(f"step {i:4d} probe lambda_max="
                       f"{out['lambda_max']:.4f}")
+            if controller is not None and \
+                    probes.should_run(i, controller.every):
+                out = controller(i, state)
+                if sink is not None:
+                    sink.write(i, {f"{controller.name}/{k}": v
+                                   for k, v in out.items()}, last=True)
+                print(f"step {i:4d} controller "
+                      f"B_noise={out['b_noise']:.1f} "
+                      f"global_batch={int(out['global_batch'])} "
+                      f"K={int(out['accum_steps'])} "
+                      f"lr={out['lr']:.4f}"
+                      + (" [switched]" if out["changed"] else ""))
         if sink is not None:
             sink.close()
             print(f"metrics -> {args.metrics_out}")

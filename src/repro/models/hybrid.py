@@ -13,8 +13,6 @@ trailing mamba blocks (zamba2: 38 = 6×6 + 2).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

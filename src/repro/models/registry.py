@@ -15,11 +15,7 @@ for encdec) when the family needs it.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Callable, NamedTuple, Optional
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec as E

@@ -95,7 +95,7 @@ def _ssd_chunked(xh, dt, a, bmat, cmat, chunk: int):
                         scores, decay, xdt)
 
     # per-chunk end states: S_c = Σ_j B_j ⊗ (exp(cum_last − cum_j)·dt_j·x_j)
-    dte = jnp.exp(cum[:, :, -1:, :] - cum) * dtc           # decay·dt [b,nc,q,h]
+    dte = jnp.exp(cum[:, :, -1:, :] - cum) * dtc   # decay·dt [b,nc,q,h]
     s_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, dte, xc)
 
     # inter-chunk recurrence over nc
@@ -172,7 +172,8 @@ def mamba_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
     da = jnp.exp(dt32 * a)                                   # [B, H]
     state = cache.state * da[:, :, None, None] + jnp.einsum(
         "bh,bhp,bn->bhpn", dt32, xh, bvec)
-    y = jnp.einsum("bhpn,bn->bhp", state, cvec) + params["D"][None, :, None] * xh
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec) \
+        + params["D"][None, :, None] * xh
     y = y.reshape(bsz, 1, di).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = L.rmsnorm(params["norm"], y, cfg.norm_eps)

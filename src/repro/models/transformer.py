@@ -17,7 +17,6 @@ MoE aux losses are accumulated through the scan carry.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

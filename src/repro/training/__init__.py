@@ -1,4 +1,9 @@
-"""repro.training — tasks, unified train step, accumulation, fit loop."""
+"""repro.training — tasks, unified train step, accumulation, fit loop,
+adaptive batch-size control."""
+from repro.training.controller import (AdaptiveBatchController,
+                                       ControllerConfig,
+                                       decide_global_batch,
+                                       snap_accum_steps)
 from repro.training.losses import WeightedMean
 from repro.training.tasks import Task, classifier_task, lm_task, ssl_task
 from repro.training.train_state import TrainState
@@ -6,7 +11,8 @@ from repro.training.trainer import (fit, make_classifier_step,
                                     make_ssl_step, make_train_step)
 
 __all__ = [
-    "Task", "TrainState", "WeightedMean", "classifier_task", "fit",
+    "AdaptiveBatchController", "ControllerConfig", "Task", "TrainState",
+    "WeightedMean", "classifier_task", "decide_global_batch", "fit",
     "lm_task", "make_classifier_step", "make_ssl_step", "make_train_step",
-    "ssl_task",
+    "snap_accum_steps", "ssl_task",
 ]

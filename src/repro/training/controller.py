@@ -1,0 +1,327 @@
+"""Noise-scale-driven adaptive batch-size controller.
+
+The first *feedback* path in the system: the measurement subsystem
+(PR 3's ``GradNoiseProbe``) steers the execution engine (PR 2's
+scan-accumulated train step).  McCandlish et al.'s critical-batch-size
+analysis says the simple gradient noise scale ``B_noise = tr(Σ)/‖G‖²``
+estimates the batch size where data parallelism stops paying: training
+at B ≪ B_noise wastes optimizer steps on noise-dominated gradients,
+B ≫ B_noise wastes samples.  The paper's TVLARS story adds the twist
+that early-phase gradient noise is a *feature* — it is what escapes the
+sharp minimizers warm-up LARS falls into — and B_noise is small early
+and grows as ‖G‖² shrinks, so the controller naturally reproduces the
+McCandlish schedule: small batch (noisy, exploratory) early, large
+batch late.
+
+Mechanically the control variable is ``K = accum_steps`` at **fixed
+microbatch size**: global batch ``B = K × microbatch``.  Changing K
+only changes the length of the accumulation scan axis, so peak memory
+(one microbatch of activations + one f32 grad accumulator) never
+moves, and under ``use_kernel="fused"`` every global step is still
+exactly two ``pallas_call``s at any K.
+
+LR co-scaling: each visited K compiles its own train step whose
+optimizer is built by ``optimizer_factory(global_batch)`` at the batch
+it will actually train at, so the LR (and TVLARS's γ_min) always
+reflect the *current* global batch; the stateful
+``schedules.batch_scaled_lr(batch_size_fn=)`` path reports the
+in-effect LR (``controller.lr`` / the ``controller/lr`` metric), and
+the K-switch parity tests pin it to the optimizer actually built.
+Optimizer **state** (momentum / Adam moments) depends only on the
+params tree, so it carries across K switches unchanged; compiled steps
+are cache-keyed by K, so revisiting a K is free (zero recompiles).
+
+The controller is itself a :class:`repro.diagnostics.probes.Probe`
+(``name="controller"``, runs every ``config.every`` steps), so
+``trainer.fit(controller=...)`` streams its decisions through the
+metrics sink as ``controller/*`` alongside training metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core import schedules
+from repro.core.base import GradientTransform
+
+SNAP_MODES = ("pow2", "linear")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Decision-rule knobs for :class:`AdaptiveBatchController`.
+
+    ``microbatch``   fixed per-pass batch; K = global / microbatch.
+    ``batch_min/max``  global-batch clamp (inclusive); both must be
+                     K·microbatch-representable under ``snap``.
+    ``every``        decision cadence in global steps (probe boundary).
+    ``deadband``     relative hold band: a candidate batch within
+                     ``±deadband × current`` of the current batch is
+                     ignored — the no-op (zero-recompile) regime.
+    ``ema``          smoothing weight on the previous B_noise estimate
+                     (0 = trust each probe reading outright).
+    ``snap``         "pow2" snaps K to powers of two (few compiled
+                     steps); "linear" allows any integer K.
+    """
+    microbatch: int
+    batch_min: int
+    batch_max: int
+    every: int = 10
+    deadband: float = 0.25
+    ema: float = 0.5
+    snap: str = "pow2"
+
+    def __post_init__(self):
+        if self.microbatch < 1:
+            raise ValueError(f"microbatch must be >= 1, "
+                             f"got {self.microbatch}")
+        if self.batch_min < self.microbatch:
+            raise ValueError(
+                f"batch_min={self.batch_min} must be >= microbatch="
+                f"{self.microbatch} (K >= 1)")
+        if self.batch_max < self.batch_min:
+            raise ValueError(f"batch_max={self.batch_max} < batch_min="
+                             f"{self.batch_min}")
+        if self.batch_min % self.microbatch or \
+                self.batch_max % self.microbatch:
+            raise ValueError(
+                f"batch_min/batch_max ({self.batch_min}/{self.batch_max}) "
+                f"must be multiples of microbatch={self.microbatch}")
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+        if not 0.0 <= self.ema < 1.0:
+            raise ValueError(f"ema must be in [0, 1), got {self.ema}")
+        if self.deadband < 0.0:
+            raise ValueError(f"deadband must be >= 0, "
+                             f"got {self.deadband}")
+        if self.snap not in SNAP_MODES:
+            raise ValueError(f"snap={self.snap!r}; one of {SNAP_MODES}")
+
+    @property
+    def k_min(self) -> int:
+        return self.batch_min // self.microbatch
+
+    @property
+    def k_max(self) -> int:
+        return self.batch_max // self.microbatch
+
+
+def snap_accum_steps(target_batch: float, cfg: ControllerConfig) -> int:
+    """Map a target global batch onto a representable K in
+    [k_min, k_max]: round to the nearest ``snap`` point of
+    ``K × microbatch`` (nearest power-of-two K for "pow2")."""
+    k = max(float(target_batch) / cfg.microbatch, 1e-9)
+    if cfg.snap == "pow2":
+        k = 2.0 ** round(math.log2(k))
+    return int(min(max(round(k), cfg.k_min), cfg.k_max))
+
+
+def decide_global_batch(b_noise: float, current_batch: int,
+                        cfg: ControllerConfig) -> int:
+    """The B_noise → global-batch decision rule (pure, host-side).
+
+    Target the noise scale itself (McCandlish: B* ≈ B_noise), snap to a
+    representable K·microbatch, clamp to [batch_min, batch_max], and
+    hold — return ``current_batch`` unchanged — when the candidate is
+    within the relative deadband of the current batch.  A non-finite or
+    non-positive B_noise (noise-dominated ‖G‖² estimate) always holds.
+    """
+    if not math.isfinite(b_noise) or b_noise <= 0.0:
+        return current_batch
+    candidate = snap_accum_steps(b_noise, cfg) * cfg.microbatch
+    if candidate == current_batch:
+        return current_batch
+    if abs(candidate - current_batch) <= cfg.deadband * current_batch:
+        return current_batch
+    return candidate
+
+
+class AdaptiveBatchController:
+    """Closed-loop batch-size controller: B_noise probe → K retarget →
+    LR re-scale, as a trainer callback (see module docstring).
+
+    Parameters
+    ----------
+    make_step:
+        ``(optimizer, accum_steps) -> train_step`` — the raw (unjitted)
+        step factory; normally ``lambda opt, k:
+        trainer.make_train_step(task, opt, accum_steps=k)``.
+    optimizer_factory:
+        ``(global_batch: int) -> GradientTransform``.  Must scale the
+        LR from the global batch (e.g. ``build_optimizer(...,
+        batch_size=B)``); the state structure must not depend on B so
+        optimizer state carries across switches.
+    noise_probe:
+        ``(step, state) -> {"grad_noise_scale": float, ...}`` — a
+        :class:`~repro.diagnostics.probes.GradNoiseProbe` on a held
+        stacked batch, or any callable with that contract.
+    config:
+        :class:`ControllerConfig`.
+    init_batch:
+        starting global batch (default ``config.batch_min``).
+    lr_fn:
+        ``() -> float`` reporting the LR for the *current* batch, used
+        for the ``controller/lr`` metric; default is the stateful
+        ``schedules.batch_scaled_lr(base_lr, base_batch_size=...,
+        rule=..., batch_size_fn=<current batch>)`` built from
+        ``base_lr``/``base_batch_size``/``scaling_rule``.
+    """
+
+    name = "controller"
+
+    def __init__(self, make_step: Callable[[GradientTransform, int], Any],
+                 optimizer_factory: Callable[[int], GradientTransform],
+                 noise_probe: Callable[[int, Any], dict],
+                 config: ControllerConfig, *,
+                 init_batch: Optional[int] = None,
+                 base_lr: float = 1.0, base_batch_size: int = 256,
+                 scaling_rule: str = "sqrt",
+                 lr_fn: Optional[Callable[[], float]] = None,
+                 donate: bool = False):
+        self.config = config
+        self.every = config.every
+        self._make_step = make_step
+        self._optimizer_factory = optimizer_factory
+        self.noise_probe = noise_probe
+        self._donate = donate
+        init_batch = config.batch_min if init_batch is None else init_batch
+        if init_batch % config.microbatch:
+            raise ValueError(
+                f"init_batch={init_batch} must be a multiple of "
+                f"microbatch={config.microbatch}")
+        if not config.batch_min <= init_batch <= config.batch_max:
+            raise ValueError(
+                f"init_batch={init_batch} outside "
+                f"[{config.batch_min}, {config.batch_max}]")
+        self._global_batch = int(init_batch)
+        # the stateful LR path: re-reads the current batch on each call
+        self._lr_fn = lr_fn if lr_fn is not None else \
+            schedules.batch_scaled_lr(
+                base_lr, base_batch_size=base_batch_size,
+                rule=scaling_rule,
+                batch_size_fn=lambda: self._global_batch)
+        self._b_ema: Optional[float] = None
+        self._optimizers: dict[int, GradientTransform] = {}
+        self._raw_steps: dict[int, Any] = {}
+        self._jit_steps: dict[int, Any] = {}
+        self._streams: list = []
+        self.compiles = 0
+        self.switches = 0
+
+    # ------------------------------------------------------------ state
+    @property
+    def global_batch(self) -> int:
+        return self._global_batch
+
+    @property
+    def accum_steps(self) -> int:
+        return self._global_batch // self.config.microbatch
+
+    @property
+    def lr(self) -> float:
+        return float(self._lr_fn())
+
+    @property
+    def visited_ks(self) -> tuple[int, ...]:
+        return tuple(sorted(self._raw_steps))
+
+    def optimizer(self, global_batch: Optional[int] = None
+                  ) -> GradientTransform:
+        """The (cached) optimizer for ``global_batch`` — use
+        ``controller.optimizer()`` to create the initial TrainState so
+        step 0 already trains at the controller's starting batch."""
+        b = self._global_batch if global_batch is None else global_batch
+        if b not in self._optimizers:
+            self._optimizers[b] = self._optimizer_factory(b)
+        return self._optimizers[b]
+
+    def raw_step(self, accum_steps: Optional[int] = None):
+        """The unjitted step for K (cached) — what ``step_fn`` compiles
+        and what the 2-``pallas_call`` invariant tests introspect."""
+        k = self.accum_steps if accum_steps is None else accum_steps
+        if k not in self._raw_steps:
+            opt = self.optimizer(k * self.config.microbatch)
+            self._raw_steps[k] = self._make_step(opt, k)
+        return self._raw_steps[k]
+
+    def step_fn(self, accum_steps: Optional[int] = None):
+        """The jitted step for the current K.  Cache-keyed by K:
+        building (and compiling) happens once per K actually visited;
+        revisiting a K is a dict lookup."""
+        k = self.accum_steps if accum_steps is None else accum_steps
+        if k not in self._jit_steps:
+            raw = self.raw_step(k)
+            self._jit_steps[k] = jax.jit(raw, donate_argnums=(0,)) \
+                if self._donate else jax.jit(raw)
+            self.compiles += 1
+        return self._jit_steps[k]
+
+    def attach(self, stream) -> None:
+        """Register a stream to retarget on K switches (anything with
+        ``set_accum_steps``); ``fit(controller=...)`` calls this on its
+        batch iterable automatically."""
+        if not hasattr(stream, "set_accum_steps"):
+            raise TypeError(
+                f"controller stream must expose set_accum_steps(k) "
+                f"(e.g. data.pipeline.MicrobatchedStream); got "
+                f"{type(stream).__name__}")
+        if stream.microbatch != self.config.microbatch:
+            raise ValueError(
+                f"stream microbatch {stream.microbatch} != controller "
+                f"microbatch {self.config.microbatch}")
+        if stream not in self._streams:
+            self._streams.append(stream)
+        stream.set_accum_steps(self.accum_steps)
+
+    # -------------------------------------------------------- decisions
+    def retarget(self, global_batch: int) -> bool:
+        """Set the global batch directly (the decision's apply path;
+        also useful for scripted schedules).  Returns True if the batch
+        changed.  Takes effect at the next ``next(stream)`` /
+        ``step_fn()`` — the re-stack boundary between jitted segments."""
+        cfg = self.config
+        if global_batch % cfg.microbatch:
+            raise ValueError(
+                f"global_batch={global_batch} not a multiple of "
+                f"microbatch={cfg.microbatch}")
+        if not cfg.batch_min <= global_batch <= cfg.batch_max:
+            raise ValueError(
+                f"global_batch={global_batch} outside "
+                f"[{cfg.batch_min}, {cfg.batch_max}]")
+        if global_batch == self._global_batch:
+            return False
+        self._global_batch = int(global_batch)
+        self.switches += 1
+        for stream in self._streams:
+            stream.set_accum_steps(self.accum_steps)
+        return True
+
+    def __call__(self, step: int, state) -> dict[str, float]:
+        """Probe boundary: measure B_noise, decide, apply; returns the
+        ``controller/*`` metrics for the sink."""
+        measured = float(self.noise_probe(step, state)["grad_noise_scale"])
+        # a non-finite / non-positive reading (noise-dominated ‖G‖²
+        # estimate) carries no information: keep it OUT of the EMA —
+        # folding it in would poison the smoothed estimate and freeze
+        # the controller for ~1/(1-ema) further boundaries — and hold.
+        valid = math.isfinite(measured) and measured > 0.0
+        if valid:
+            self._b_ema = measured if self._b_ema is None else \
+                self.config.ema * self._b_ema \
+                + (1.0 - self.config.ema) * measured
+        smoothed = self._b_ema if self._b_ema is not None else measured
+        if valid:
+            target = decide_global_batch(smoothed, self._global_batch,
+                                         self.config)
+        else:
+            target = self._global_batch
+        cached = target // self.config.microbatch in self._jit_steps
+        changed = self.retarget(target)
+        return {"b_noise": measured, "b_noise_ema": smoothed,
+                "global_batch": float(self._global_batch),
+                "accum_steps": float(self.accum_steps),
+                "lr": self.lr, "changed": float(changed),
+                "step_cached": float(cached)}

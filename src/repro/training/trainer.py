@@ -154,12 +154,14 @@ def make_ssl_step(embed_fn: Callable, optimizer: GradientTransform, *,
         accum_steps=accum_steps, record_norms=record_norms)
 
 
-def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
+def fit(train_step: Optional[Callable], state: TrainState, batches,
+        num_steps: int,
         *, recorder: Optional[instrumentation.NormRecorder] = None,
         log_every: int = 0, log_fn: Callable = print,
         donate: Optional[bool] = None,
         sink: Optional["sinks.MetricsSink"] = None,
-        callbacks: Sequence = ()) -> tuple[TrainState, list[dict]]:
+        callbacks: Sequence = (),
+        controller=None) -> tuple[TrainState, list[dict]]:
     """Host loop used by CPU-scale experiments. ``batches`` yields one
     pytree per *global* step: dict batches (LM) or tuples
     (classifier/SSL args); for an accumulating step the leaves carry the
@@ -182,21 +184,46 @@ def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
     params and optimizer buffers update in place — this is what makes
     the fused optimizer path's flat momentum buffers memory-neutral at
     scale. Default: on for tpu/gpu, off on CPU (where XLA cannot reuse
-    donated buffers and would warn every call)."""
-    if donate is None:
-        donate = jax.default_backend() in ("tpu", "gpu")
-    step_fn = jax.jit(train_step, donate_argnums=(0,)) if donate \
-        else jax.jit(train_step)
+    donated buffers and would warn every call).
+
+    ``controller`` is an :class:`repro.training.controller
+    .AdaptiveBatchController`: pass ``train_step=None`` and a
+    ``batches`` stream exposing ``set_accum_steps`` (e.g.
+    :class:`repro.data.pipeline.MicrobatchedStream`).  The controller
+    owns the per-K compiled steps (cache-keyed, so revisiting a K is
+    free), runs as a probe every ``controller.every`` steps streaming
+    ``controller/*`` metrics, and its K switches take effect at the
+    next batch pull — the re-stack boundary between jitted segments.
+    ``donate`` is governed by the controller's own ``donate=`` flag in
+    this mode."""
+    if controller is not None:
+        if train_step is not None:
+            raise ValueError(
+                "pass train_step=None with controller=: the controller "
+                "builds (and caches) the per-K train steps itself")
+        controller.attach(batches)
+        callbacks = (*callbacks, controller)
+        step_fn = None
+    else:
+        if donate is None:
+            donate = jax.default_backend() in ("tpu", "gpu")
+        step_fn = jax.jit(train_step, donate_argnums=(0,)) if donate \
+            else jax.jit(train_step)
     if sink is None:
         sink = sinks.ConsoleSink(every=log_every, log_fn=log_fn) \
             if log_every else None
     history: list[dict] = []
     for i in range(num_steps):
+        # read the target BEFORE the pull: controller retargets land at
+        # the next pull, so this is the batch this step trains at
+        step_batch_size = controller.global_batch \
+            if controller is not None else None
         batch = next(batches)
+        fn = controller.step_fn() if controller is not None else step_fn
         if isinstance(batch, dict):
-            state, metrics = step_fn(state, batch)
+            state, metrics = fn(state, batch)
         else:
-            state, metrics = step_fn(state, *batch)
+            state, metrics = fn(state, *batch)
         ln = metrics.pop("layer_norms", None)
         if recorder is not None and ln is not None:
             recorder.record(i, ln)
@@ -204,6 +231,10 @@ def fit(train_step: Callable, state: TrainState, batches, num_steps: int,
         # per-class vectors) come back as host numpy arrays
         host = {k: float(v) if jnp.ndim(v) == 0 else jax.device_get(v)
                 for k, v in metrics.items()}
+        if step_batch_size is not None:
+            # adaptive runs: every record carries the batch it trained
+            # at (the static sink field would go stale across switches)
+            host["global_batch"] = float(step_batch_size)
         history.append(host)
         last = i == num_steps - 1
         if sink is not None:

@@ -28,7 +28,7 @@ from repro.data.synthetic import (ClassificationData, lm_batch,
 from repro.kernels.ops import count_pallas_calls
 from repro.models import get_model
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
-from repro.training import classifier_task, lm_task, ssl_task
+from repro.training import classifier_task, ssl_task
 from repro.training.losses import WeightedMean
 from repro.training.train_state import TrainState
 from repro.training.trainer import make_train_step
@@ -64,6 +64,7 @@ def test_classifier_parity_distinct_microbatches():
         np.testing.assert_allclose(float(m1[k]), float(mK[k]), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_dense_lm_parity_distinct_microbatches():
     cfg = ModelConfig(family="dense", num_layers=2, d_model=32, num_heads=2,
                       num_kv_heads=2, d_ff=64, vocab_size=64, remat=False)
@@ -81,6 +82,7 @@ def test_dense_lm_parity_distinct_microbatches():
                                float(mK["grad_norm"]), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_lm_parity_tiled_microbatches():
     """MoE aux losses are batch statistics: parity vs 1×B holds exactly
     on a tiled batch (identical per-row routing in every copy)."""

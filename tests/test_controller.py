@@ -1,0 +1,332 @@
+"""Adaptive batch-size controller: decision rule, K-switch parity,
+LR co-scaling, deadband no-op (zero recompiles), 2-``pallas_call``
+invariant at every visited K, and position-preserving streams.
+
+The headline contract: a controller K-change mid-run must produce
+parameters identical (≤1e-6) to a fresh run started at the new K from
+the same state — same upcoming samples (position-preserving stream),
+same optimizer build (LR scaled from the new global batch), same step
+semantics.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_optimizer, schedules
+from repro.data.pipeline import MicrobatchedStream
+from repro.data.synthetic import (ClassificationData,
+                                  classification_sample_source,
+                                  lm_sample_source)
+from repro.diagnostics import sink as sink_lib
+from repro.kernels.ops import count_pallas_calls
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+from repro.training import (AdaptiveBatchController, ControllerConfig,
+                            TrainState, classifier_task,
+                            decide_global_batch, fit, snap_accum_steps)
+from repro.training.trainer import make_train_step
+
+DATA = ClassificationData(num_classes=4, image_size=8, seed=0)
+TASK = classifier_task(apply_mlp_classifier)
+BASE_LR = 0.4
+BASE_BATCH = 256
+
+
+def _params():
+    return init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                               num_classes=4, hidden=16)
+
+
+def _factory(use_kernel=False):
+    return lambda b: build_optimizer(
+        "tvlars", total_steps=50, learning_rate=BASE_LR, batch_size=b,
+        base_batch_size=BASE_BATCH, use_kernel=use_kernel)
+
+
+def _stub_probe(value):
+    return lambda step, state: {"grad_noise_scale": float(value)}
+
+
+def _controller(probe, *, micro=4, bmin=4, bmax=64, every=2, init=None,
+                use_kernel=False, **cfg_kw):
+    cfg = ControllerConfig(microbatch=micro, batch_min=bmin,
+                           batch_max=bmax, every=every, **cfg_kw)
+    return AdaptiveBatchController(
+        lambda opt, k: make_train_step(TASK, opt, accum_steps=k),
+        _factory(use_kernel), probe, cfg, init_batch=init,
+        base_lr=BASE_LR, base_batch_size=BASE_BATCH)
+
+
+# --------------------------------------------------------- decision rule
+def test_snap_and_decide_rule():
+    cfg = ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                           deadband=0.25, ema=0.0)
+    assert snap_accum_steps(3.0, cfg) == 1
+    assert snap_accum_steps(25.0, cfg) == 8       # 6.25 -> pow2 -> 8
+    assert snap_accum_steps(1e9, cfg) == 16       # k_max clamp
+    assert decide_global_batch(1e9, 4, cfg) == 64
+    assert decide_global_batch(0.5, 64, cfg) == 4
+    # non-finite / non-positive noise estimates always hold
+    assert decide_global_batch(float("nan"), 32, cfg) == 32
+    assert decide_global_batch(float("inf"), 32, cfg) == 32
+    assert decide_global_batch(-3.0, 32, cfg) == 32
+
+
+def test_decide_rule_deadband_linear_snap():
+    cfg = ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                           deadband=0.25, snap="linear")
+    # candidate 36 is within +-25% of 32 -> hold
+    assert decide_global_batch(36.0, 32, cfg) == 32
+    # candidate 44 is outside the band -> move
+    assert decide_global_batch(44.0, 32, cfg) == 44
+
+
+def test_controller_config_validation():
+    with pytest.raises(ValueError, match="batch_min"):
+        ControllerConfig(microbatch=8, batch_min=4, batch_max=64)
+    with pytest.raises(ValueError, match="multiples of microbatch"):
+        ControllerConfig(microbatch=4, batch_min=6, batch_max=64)
+    with pytest.raises(ValueError, match="batch_max"):
+        ControllerConfig(microbatch=4, batch_min=32, batch_max=16)
+    with pytest.raises(ValueError, match="snap"):
+        ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                         snap="cubic")
+    with pytest.raises(ValueError, match="ema"):
+        ControllerConfig(microbatch=4, batch_min=4, batch_max=64, ema=1.0)
+
+
+# --------------------------------------------------------------- streams
+def test_stream_set_accum_steps_preserves_position():
+    s = MicrobatchedStream(lambda start, count:
+                           jnp.arange(start, start + count),
+                           microbatch=2, accum_steps=2)
+    np.testing.assert_array_equal(np.asarray(next(s)), [[0, 1], [2, 3]])
+    s.set_accum_steps(3)
+    np.testing.assert_array_equal(np.asarray(next(s)),
+                                  [[4, 5], [6, 7], [8, 9]])
+    s.set_accum_steps(1)           # K=1 yields unstacked leaves
+    np.testing.assert_array_equal(np.asarray(next(s)), [10, 11])
+    assert s.position == 12 and s.global_batch == 2
+    with pytest.raises(ValueError, match=">= 1"):
+        s.set_accum_steps(0)
+
+
+def test_classification_sample_source_partition_invariant():
+    src = classification_sample_source(DATA, seed=3)
+    x8, y8 = src(0, 8)
+    xa, ya = src(0, 4)
+    xb, yb = src(4, 4)
+    np.testing.assert_array_equal(np.concatenate([xa, xb]),
+                                  np.asarray(x8))
+    np.testing.assert_array_equal(np.concatenate([ya, yb]),
+                                  np.asarray(y8))
+
+
+def test_lm_sample_source_partition_invariant():
+    src = lm_sample_source(seq_len=8, vocab=32, seed=1)
+    full = src(0, 6)
+    a, b = src(0, 2), src(2, 4)
+    np.testing.assert_array_equal(
+        np.concatenate([a["tokens"], b["tokens"]]),
+        np.asarray(full["tokens"]))
+    np.testing.assert_array_equal(
+        np.concatenate([a["labels"], b["labels"]]),
+        np.asarray(full["labels"]))
+
+
+# ------------------------------------------------------- the closed loop
+def test_k_switch_parity_with_fresh_run():
+    """Acceptance: params after a mid-run K switch == a fresh run
+    started at the new K from the same state, to <=1e-6."""
+    ctrl = _controller(_stub_probe(1.0), micro=4, init=8, every=100)
+    state = TrainState.create(_params(), ctrl.optimizer())
+    stream = MicrobatchedStream(classification_sample_source(DATA),
+                                microbatch=4, accum_steps=1)
+    ctrl.attach(stream)
+    assert stream.accum_steps == 2       # attach syncs K to init_batch=8
+    for _ in range(3):
+        state, _ = ctrl.step_fn()(state, next(stream))
+    switch_state, switch_pos = state, stream.position
+
+    assert ctrl.retarget(16)             # B: 8 -> 16, i.e. K: 2 -> 4
+    cont = switch_state
+    for _ in range(3):
+        cont, _ = ctrl.step_fn()(cont, next(stream))
+
+    # fresh run: optimizer built AT B=16, fresh jit, fresh stream at the
+    # switch position — must see the identical upcoming samples
+    opt2 = _factory()(16)
+    step2 = jax.jit(make_train_step(TASK, opt2, accum_steps=4))
+    fresh_stream = MicrobatchedStream(classification_sample_source(DATA),
+                                      microbatch=4, accum_steps=4,
+                                      position=switch_pos)
+    fresh = switch_state
+    for _ in range(3):
+        fresh, _ = step2(fresh, next(fresh_stream))
+
+    for a, b in zip(jax.tree_util.tree_leaves(cont.params),
+                    jax.tree_util.tree_leaves(fresh.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_invalid_noise_reading_holds_and_spares_the_ema():
+    """A negative/non-finite B_noise reading (noise-dominated grad_sq
+    estimate) must hold AND stay out of the EMA — folding it in would
+    freeze the controller for ~1/(1-ema) further boundaries."""
+    vals = iter([200.0, -1e9, float("nan"), 200.0])
+
+    def probe(step, state):
+        return {"grad_noise_scale": next(vals)}
+
+    ctrl = _controller(probe, micro=4, bmax=256, init=4, every=1,
+                       ema=0.5, deadband=0.0, snap="linear")
+    state = TrainState.create(_params(), ctrl.optimizer())
+    out = ctrl(0, state)                       # good reading: act
+    assert out["changed"] == 1.0 and out["global_batch"] == 200.0
+    for i in (1, 2):                           # invalid readings: hold
+        out = ctrl(i, state)
+        assert out["changed"] == 0.0
+        assert out["b_noise_ema"] == 200.0     # EMA untouched
+    out = ctrl(3, state)                       # recovery is immediate
+    assert out["b_noise_ema"] == 200.0
+    assert out["global_batch"] == 200.0
+
+
+def test_lr_follows_batch_scaled_lr_across_switch():
+    ctrl = _controller(_stub_probe(64.0), micro=4, init=4, every=1,
+                       ema=0.0, deadband=0.0)
+    state = TrainState.create(_params(), ctrl.optimizer())
+    assert ctrl.lr == pytest.approx(
+        schedules.batch_scaled_lr(BASE_LR, 4, BASE_BATCH))
+    out = ctrl(0, state)
+    assert out["changed"] == 1.0 and out["global_batch"] == 64.0
+    assert out["lr"] == pytest.approx(
+        schedules.batch_scaled_lr(BASE_LR, 64, BASE_BATCH))
+
+
+def test_batch_scaled_lr_stateful_path():
+    box = {"b": 64}
+    lr_fn = schedules.batch_scaled_lr(2.0, base_batch_size=256,
+                                      rule="sqrt",
+                                      batch_size_fn=lambda: box["b"])
+    assert lr_fn() == pytest.approx(1.0)
+    box["b"] = 256                      # re-read on every call
+    assert lr_fn() == pytest.approx(2.0)
+    with pytest.raises(ValueError, match="exactly one"):
+        schedules.batch_scaled_lr(2.0)
+    with pytest.raises(ValueError, match="exactly one"):
+        schedules.batch_scaled_lr(2.0, 64, batch_size_fn=lambda: 4)
+
+
+def test_deadband_noop_zero_recompiles():
+    """B_noise inside the deadband: no K change, no recompile — the
+    cached step keeps serving."""
+    ctrl = _controller(_stub_probe(36.0), micro=4, init=32, every=1,
+                       deadband=0.25, ema=0.0, snap="linear")
+    state = TrainState.create(_params(), ctrl.optimizer())
+    stream = MicrobatchedStream(classification_sample_source(DATA),
+                                microbatch=4, accum_steps=8)
+    ctrl.attach(stream)
+    for i in range(4):
+        state, _ = ctrl.step_fn()(state, next(stream))
+        out = ctrl(i, state)
+        assert out["changed"] == 0.0
+        assert out["step_cached"] == 1.0
+    assert ctrl.compiles == 1
+    assert ctrl.switches == 0
+    assert ctrl.visited_ks == (8,)
+
+
+def test_two_pallas_calls_at_every_visited_k():
+    """The fused substrate's launch-collapse invariant holds at every K
+    the controller visits: exactly 2 pallas_calls per global step."""
+    ctrl = _controller(_stub_probe(1.0), micro=4, init=4, every=100,
+                       use_kernel="fused")
+    state = TrainState.create(_params(), ctrl.optimizer())
+    stream = MicrobatchedStream(classification_sample_source(DATA),
+                                microbatch=4, accum_steps=1)
+    ctrl.attach(stream)
+    for target in (4, 16, 64):
+        ctrl.retarget(target)
+        batch = next(stream)
+        state, _ = ctrl.step_fn()(state, *batch) \
+            if isinstance(batch, tuple) else ctrl.step_fn()(state, batch)
+    assert ctrl.visited_ks == (1, 4, 16)
+    for k in ctrl.visited_ks:
+        stream.set_accum_steps(k)
+        batch = next(stream)
+        jaxpr = jax.make_jaxpr(ctrl.raw_step(k))(state, *batch)
+        assert count_pallas_calls(jaxpr.jaxpr) == 2, f"K={k}"
+
+
+def test_fit_controller_streams_metrics(tmp_path):
+    """fit(controller=): decisions land in the sink as controller/*,
+    the JSONL passes the schema check, and a forced switch carries the
+    re-scaled LR at the same step."""
+    vals = iter([4.0, 64.0, 64.0])
+
+    def probe(step, state):
+        return {"grad_noise_scale": next(vals)}
+    ctrl = _controller(probe, micro=4, init=4, every=2, ema=0.0,
+                       deadband=0.0)
+    state = TrainState.create(_params(), ctrl.optimizer())
+    stream = MicrobatchedStream(classification_sample_source(DATA),
+                                microbatch=4, accum_steps=1)
+    path = str(tmp_path / "ctrl.jsonl")
+    mem = sink_lib.MemorySink()
+    with sink_lib.JsonlSink(path) as jsonl:
+        state, hist = fit(None, state, stream, 6,
+                          sink=sink_lib.MultiSink(jsonl, mem),
+                          controller=ctrl)
+    assert sink_lib.validate_jsonl(path) > 0
+    with open(path) as f:
+        recs = [json.loads(line) for line in f if line.strip()]
+    switches = [r for r in recs if r.get("controller/changed") == 1.0]
+    assert len(switches) == 1 and switches[0]["step"] == 2
+    assert switches[0]["controller/global_batch"] == 64.0
+    assert switches[0]["controller/lr"] == pytest.approx(
+        schedules.batch_scaled_lr(BASE_LR, 64, BASE_BATCH))
+    # the in-memory sink saw the identical stream the file sink saw
+    assert mem.records == recs
+    assert mem.by_key("controller/changed") == [
+        (r["step"], r["controller/changed"]) for r in recs
+        if "controller/changed" in r]
+    # every training record carries the batch that step trained at:
+    # step 0 still at B=4, steps 3+ at the switched B=64
+    per_step = dict(mem.by_key("global_batch"))
+    assert per_step[0] == 4.0 and per_step[5] == 64.0
+    assert len(hist) == 6 and hist[0]["global_batch"] == 4.0
+    assert ctrl.visited_ks == (1, 16)
+
+
+def test_fit_rejects_train_step_with_controller():
+    ctrl = _controller(_stub_probe(1.0))
+    state = TrainState.create(_params(), ctrl.optimizer())
+    stream = MicrobatchedStream(classification_sample_source(DATA),
+                                microbatch=4, accum_steps=1)
+    with pytest.raises(ValueError, match="train_step=None"):
+        fit(make_train_step(TASK, ctrl.optimizer()), state, stream, 1,
+            controller=ctrl)
+
+
+def test_attach_validation():
+    ctrl = _controller(_stub_probe(1.0))
+    with pytest.raises(TypeError, match="set_accum_steps"):
+        ctrl.attach(iter([]))
+    bad = MicrobatchedStream(classification_sample_source(DATA),
+                             microbatch=8, accum_steps=1)
+    with pytest.raises(ValueError, match="microbatch"):
+        ctrl.attach(bad)
+
+
+def test_retarget_validation():
+    ctrl = _controller(_stub_probe(1.0), micro=4, bmin=4, bmax=64,
+                       init=8)
+    with pytest.raises(ValueError, match="multiple"):
+        ctrl.retarget(10)
+    with pytest.raises(ValueError, match="outside"):
+        ctrl.retarget(128)
+    assert not ctrl.retarget(8)      # no-op retarget reports False

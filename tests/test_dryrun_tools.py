@@ -1,7 +1,6 @@
 """Dry-run tooling units: HLO collective parsing, shape-byte accounting,
 input specs, long-context skip policy."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import (ARCH_IDS, INPUT_SHAPES, LONG_CONTEXT_SKIP,

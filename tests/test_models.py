@@ -56,6 +56,7 @@ def test_smoke_one_train_step(arch_id):
     assert int(state.step) == 1
 
 
+@pytest.mark.slow          # ~2 min across the arch grid: full-CI lane
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_smoke_decode_matches_full_forward(arch_id):
     cfg = get_smoke_config(arch_id)

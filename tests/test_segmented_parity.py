@@ -110,7 +110,8 @@ def test_fused_matches_ref_oracle(name, make, monkeypatch):
 
 def test_fused_matches_per_tensor_path():
     params, grads = _problem(seed=7)
-    make = lambda uk: lars(schedules.constant(0.3), use_kernel=uk)
+    def make(uk):
+        return lars(schedules.constant(0.3), use_kernel=uk)
     _assert_trees_close(_run(make("per_tensor"), params, grads, 3),
                         _run(make("fused"), params, grads, 3),
                         rtol=2e-5, atol=1e-6)

@@ -193,6 +193,7 @@ def _tiny_lm():
     return cfg, get_model(cfg)
 
 
+@pytest.mark.slow
 def test_lm_training_reduces_loss():
     cfg, m = _tiny_lm()
     opt = build_optimizer("tvlars", total_steps=30, learning_rate=1.5)
@@ -202,8 +203,8 @@ def test_lm_training_reduces_loss():
     def batches():
         i = 0
         while True:
-            t, l = lm_batch(jax.random.PRNGKey(i % 4), 8, 32, 64)
-            yield {"tokens": t, "labels": l}
+            t, y = lm_batch(jax.random.PRNGKey(i % 4), 8, 32, 64)
+            yield {"tokens": t, "labels": y}
             i += 1
 
     state, hist = fit(step, state, batches(), 60)
@@ -262,8 +263,8 @@ def test_norm_recorder_fig2_telemetry():
 
     def batches():
         while True:
-            t, l = lm_batch(jax.random.PRNGKey(0), 4, 16, 64)
-            yield {"tokens": t, "labels": l}
+            t, y = lm_batch(jax.random.PRNGKey(0), 4, 16, 64)
+            yield {"tokens": t, "labels": y}
 
     state, _ = fit(step, state, batches(), 10, recorder=rec)
     arrs = rec.as_arrays()

@@ -8,6 +8,7 @@ the warm-up redundancy (Appendix J) must be visible.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import NormRecorder, build_optimizer, schedules
 from repro.data.synthetic import ClassificationData, batch_iterator
@@ -39,6 +40,7 @@ def _train(opt_name, *, record=False, steps=STEPS, lr=0.5, seed=0):
     return acc, hist, rec
 
 
+@pytest.mark.slow
 def test_tvlars_beats_or_matches_walars_large_batch():
     """Table 1 directional claim at CPU scale."""
     acc_tv, hist_tv, _ = _train("tvlars")
@@ -60,6 +62,7 @@ def test_tvlars_converges_faster_early():
     assert early_tv <= early_wa + 0.02, (early_tv, early_wa)
 
 
+@pytest.mark.slow
 def test_warmup_caps_early_lnr_vs_nowa():
     """§3.2 observation 3: WA-LARS's max initial LNR is lower than
     NOWA-LARS's (warm-up regulates the ratio explosion)."""
@@ -82,6 +85,7 @@ def test_warmup_redundant_scaling_appendix_j():
     assert wa_first < 0.1 * tv_first
 
 
+@pytest.mark.slow
 def test_training_stable_across_inits():
     """§5.2.3: results stable across weight initialisations."""
     from repro.models.cnn import INITS

@@ -1,11 +1,17 @@
 #!/usr/bin/env sh
-# One-shot verification: tier-1 suite on the default (Pallas interpret)
-# dispatch, then the kernel-adjacent tests again under REPRO_FORCE_REF=1
-# so BOTH dispatch modes (pallas kernels and pure-jnp oracles) are
-# exercised in a single invocation, then a CPU end-to-end smoke of the
-# launcher with gradient accumulation (K>1) so the full
-# stack-microbatches -> scan-accumulate -> fused-apply path runs, not
-# just its unit tests. Run from the repo root:  make check
+# One-shot verification — the same four tiers CI runs as separate named
+# steps (.github/workflows/ci.yml), plus lint and the JSONL metrics
+# contract guard:
+#   1. tier-1 suite on the default (Pallas interpret) dispatch
+#   2. kernel-adjacent tests again under REPRO_FORCE_REF=1 so BOTH
+#      dispatch modes (pallas kernels and pure-jnp oracles) run
+#   3. CPU end-to-end launcher smoke with gradient accumulation (K=4),
+#      streaming metrics to experiments/bench/smoke_launcher.jsonl
+#   4. diagnostics probe smoke (tiny MLP, 2 Lanczos iters, JSONL schema)
+# then ruff lint (skipped with a notice when ruff is not installed) and
+# tools/validate_metrics.py over the smoke traces, so MetricsSink schema
+# drift fails here and in CI, not in a downstream notebook.
+# Run from the repo root:  make check
 set -eu
 
 cd "$(dirname "$0")/.."
@@ -22,9 +28,22 @@ REPRO_FORCE_REF=1 python -m pytest -q \
 
 echo "== e2e launcher smoke (gradient accumulation K=4) =="
 python -m repro.launch.train --smoke --steps 2 --seq 64 \
-    --global-batch 8 --microbatch 2 --log-every 1
+    --global-batch 8 --microbatch 2 --log-every 1 \
+    --metrics-out experiments/bench/smoke_launcher.jsonl
 
 echo "== diagnostics probe smoke (tiny MLP, 2 Lanczos iters, JSONL schema) =="
-python -m repro.diagnostics.smoke
+python -m repro.diagnostics.smoke --out experiments/bench
+
+echo "== lint (ruff) =="
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "ruff not installed; skipping lint (CI runs it)"
+fi
+
+echo "== JSONL metrics contract (tools/validate_metrics.py) =="
+python tools/validate_metrics.py \
+    experiments/bench/smoke_launcher.jsonl \
+    experiments/bench/probe_smoke.jsonl
 
 echo "check: OK"

@@ -1,10 +1,15 @@
 """Debug tool: top HLO buffer shapes for one (arch, shape) dry-run."""
-import os, re, sys
+import os
+import re
+import sys
+
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 sys.path.insert(0, "src")
-from repro.launch.dryrun import build_lowerable, _SHAPE_RE, _DTYPE_BYTES
-from repro.launch.mesh import make_production_mesh
+
 from collections import Counter
+
+from repro.launch.dryrun import _DTYPE_BYTES, _SHAPE_RE, build_lowerable
+from repro.launch.mesh import make_production_mesh
 
 arch, shape = sys.argv[1], sys.argv[2]
 mesh = make_production_mesh()
@@ -12,12 +17,17 @@ with mesh:
     fn, args = build_lowerable(arch, shape, mesh)
     compiled = fn.lower(*args).compile()
     ma = compiled.memory_analysis()
-    print(f"temp {ma.temp_size_in_bytes/2**30:.2f} arg {ma.argument_size_in_bytes/2**30:.2f} GiB")
+    print(f"temp {ma.temp_size_in_bytes/2**30:.2f} "
+          f"arg {ma.argument_size_in_bytes/2**30:.2f} GiB")
     txt = compiled.as_text()
-line_re = re.compile(r"^\s*(?:ROOT )?%?[\w.\-]+ = ((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+([\w\-]+)", re.M)
-agg = Counter(); size_of = {}
+line_re = re.compile(
+    r"^\s*(?:ROOT )?%?[\w.\-]+ = "
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+([\w\-]+)",
+    re.M)
+agg = Counter()
+size_of = {}
 for m in line_re.finditer(txt):
-    t, op = m.group(1), m.group(2)
+    t = m.group(1)
     if t.startswith("("):
         continue
     n = 0
@@ -32,5 +42,6 @@ for m in line_re.finditer(txt):
         key = t.split("{")[0]
         agg[key] += 1
         size_of[key] = n
-for key, cnt in sorted(agg.items(), key=lambda kv: -size_of[kv[0]] * kv[1])[:20]:
+top = sorted(agg.items(), key=lambda kv: -size_of[kv[0]] * kv[1])[:20]
+for key, cnt in top:
     print(f"{size_of[key]/2**30:7.2f} GiB x{cnt:3d}  {key}")

@@ -1,0 +1,70 @@
+"""CI guard for the JSONL metrics contract.
+
+Runs ``repro.diagnostics.sink.validate_jsonl`` over metrics files (or
+globs) so schema drift in ``MetricsSink`` fails the build instead of a
+downstream notebook: every line must be a JSON object with an int
+``step`` and only scalar/str/bool/list values.
+
+Usage (from the repo root, after the smoke runs have written traces):
+
+    PYTHONPATH=src python tools/validate_metrics.py \
+        "experiments/bench/*.jsonl" --min-records 1
+
+Exit codes: 0 = every matched file validates; 1 = a file failed the
+schema check or (without ``--allow-empty``) no file matched at all.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import sys
+
+from repro.diagnostics.sink import validate_jsonl
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+",
+                    help="JSONL files or glob patterns to validate")
+    ap.add_argument("--min-records", type=int, default=1,
+                    help="fail any file with fewer records (default 1)")
+    ap.add_argument("--allow-empty", action="store_true",
+                    help="exit 0 when no file matches any pattern")
+    args = ap.parse_args(argv)
+
+    files: list[str] = []
+    for pattern in args.paths:
+        matched = sorted(glob.glob(pattern))
+        if not matched and not glob.has_magic(pattern):
+            # a literal path that doesn't exist is always an error
+            print(f"validate_metrics: FAIL {pattern}: no such file",
+                  file=sys.stderr)
+            return 1
+        files.extend(matched)
+    if not files:
+        msg = f"validate_metrics: no files matched {args.paths}"
+        if args.allow_empty:
+            print(msg + " (--allow-empty)")
+            return 0
+        print(msg, file=sys.stderr)
+        return 1
+
+    failed = False
+    for path in files:
+        try:
+            n = validate_jsonl(path)
+        except ValueError as e:
+            print(f"validate_metrics: FAIL {e}", file=sys.stderr)
+            failed = True
+            continue
+        if n < args.min_records:
+            print(f"validate_metrics: FAIL {path}: {n} records "
+                  f"< --min-records {args.min_records}", file=sys.stderr)
+            failed = True
+        else:
+            print(f"validate_metrics: OK {path} ({n} records)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
