@@ -1,4 +1,4 @@
-.PHONY: check test fast bench smoke lint
+.PHONY: check test fast bench smoke lint multidevice
 
 # tier-1 suite + REPRO_FORCE_REF=1 oracle re-run (both dispatch modes)
 # + e2e launcher smoke with gradient accumulation (K>1) + probe smoke
@@ -12,6 +12,14 @@ test:
 # CI fast lane: everything not marked slow / diagnostics
 fast:
 	PYTHONPATH=src python -m pytest -q -m "not slow and not diagnostics"
+
+# CI multidevice lane: distribution numerics on 8 fabricated CPU
+# devices — shard_map train-step parity, DP controller (D,K)
+# retargeting, cross-mesh checkpoint round-trips, GSPMD parity
+multidevice:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+	    python -m pytest -q tests/test_mesh_train.py \
+	    tests/test_sharding_multidevice.py
 
 # ruff lint (config in pyproject.toml); CI fails on findings
 lint:

@@ -1,0 +1,114 @@
+"""2-D filter-normalized loss landscape: LARS vs TVLARS checkpoints.
+
+The paper's geometric claim — warm-up LARS parks in sharper basins
+than TVLARS — rendered the Li et al. (2018) way: train both optimizers
+from the same init, checkpoint both endpoints (via the sharded
+``repro.checkpoint`` path, exercising the save/restore round-trip),
+and evaluate the loss on the plane spanned by
+
+  * d₁ — the LARS→TVLARS checkpoint direction
+    (``landscape.direction_between``: α=0 is the WA-LARS minimizer,
+    α=1 the TVLARS one), and
+  * d₂ — a filter-normalized random direction
+    (``landscape.filter_normalized_direction``), the standard
+    scale-invariant off-axis probe.
+
+The grid is one ``landscape.loss_slice_2d`` call — a ``lax.map`` over
+the flat ``(rows, 128)`` substrate, no repacking per point — and
+streams through :class:`repro.diagnostics.sink.CsvSink` to
+``experiments/bench/landscape_2d.csv`` (one row per grid point:
+``step, alpha, beta, loss``), ready for a contour plot.  stdout gets
+the ``name,us_per_call,derived`` lines with the two endpoint losses
+and the max ridge height between them.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+
+import jax
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, emit
+from benchmarks.paper_runs import BASE_BATCH, DATA
+from repro.checkpoint.checkpoint import restore, save
+from repro.core import build_optimizer
+from repro.data.synthetic import batch_iterator
+from repro.diagnostics import landscape
+from repro.diagnostics import sink as sink_lib
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+from repro.training import TrainState, classifier_task, fit
+from repro.training.trainer import make_train_step
+
+BATCH = 256
+LR = 1.0
+STEPS = 40
+# numpy, not jnp: module-level jnp would initialize the jax backend at
+# import time and pin the device count before any XLA_FLAGS
+# fabrication (the launch/mesh.py import contract)
+ALPHAS = np.linspace(-0.5, 1.5, 9,
+                     dtype=np.float32)   # 0 = LARS, 1 = TVLARS ckpt
+BETAS = np.linspace(-1.0, 1.0, 7, dtype=np.float32)
+OPTS = ("wa-lars", "tvlars")
+
+
+def train_and_checkpoint(opt_name: str, *, steps: int = STEPS) -> str:
+    params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                                 num_classes=32, hidden=128)
+    opt = build_optimizer(opt_name, total_steps=steps, learning_rate=LR,
+                          batch_size=BATCH, base_batch_size=BASE_BATCH)
+    state = TrainState.create(params, opt)
+    task = classifier_task(apply_mlp_classifier)
+    state, _ = fit(make_train_step(task, opt), state,
+                   batch_iterator(DATA, BATCH), steps)
+    ckpt = os.path.join(RESULTS_DIR, f"landscape_ckpt_{opt_name}")
+    shutil.rmtree(ckpt, ignore_errors=True)
+    save(ckpt, state.params, step=steps)
+    return ckpt
+
+
+def main(steps: int = STEPS) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    template = init_mlp_classifier(jax.random.PRNGKey(0),
+                                   in_dim=8 * 8 * 3, num_classes=32,
+                                   hidden=128)
+    ckpts = {o: train_and_checkpoint(o, steps=steps) for o in OPTS}
+    params = {o: restore(ckpts[o], template) for o in OPTS}
+
+    task = classifier_task(apply_mlp_classifier)
+    batch = DATA.batch(jax.random.PRNGKey(777), 256)
+    d1 = landscape.direction_between(params["wa-lars"], params["tvlars"])
+    d2 = landscape.filter_normalized_direction(jax.random.PRNGKey(7),
+                                               params["wa-lars"])
+    grid = jax.jit(lambda: landscape.loss_slice_2d(
+        task, params["wa-lars"], d1, d2, batch, ALPHAS, BETAS))()
+    grid = jax.device_get(grid)
+
+    path = os.path.join(RESULTS_DIR, "landscape_2d.csv")
+    with sink_lib.CsvSink(path) as sink:
+        i = 0
+        for ai, a in enumerate(ALPHAS):
+            for bi, b in enumerate(BETAS):
+                sink.write(i, {"alpha": float(a), "beta": float(b),
+                               "loss": float(grid[ai, bi])},
+                           last=(ai == len(ALPHAS) - 1
+                                 and bi == len(BETAS) - 1))
+                i += 1
+
+    # the β=0 row is the 1-D LARS->TVLARS slice; its interior max is
+    # the barrier between the two basins
+    b0 = int(np.argmin(np.abs(BETAS)))
+    a0 = int(np.argmin(np.abs(ALPHAS - 0.0)))
+    a1 = int(np.argmin(np.abs(ALPHAS - 1.0)))
+    line = grid[min(a0, a1): max(a0, a1) + 1, b0]
+    barrier = float(line.max() - max(line[0], line[-1]))
+    emit("landscape/endpoints", 0.0,
+         f"loss(wa-lars)={grid[a0, b0]:.4f} "
+         f"loss(tvlars)={grid[a1, b0]:.4f}")
+    emit("landscape/barrier", 0.0,
+         f"{barrier:.4f} (max ridge above the higher endpoint on the "
+         f"LARS->TVLARS segment) grid={grid.shape} -> {path}")
+
+
+if __name__ == "__main__":
+    main()

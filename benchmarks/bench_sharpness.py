@@ -11,6 +11,14 @@ Each optimizer's full metric stream + probe trace lands in
 ``experiments/bench/sharpness_{opt}.jsonl`` (schema-validated here);
 stdout gets the usual ``name,us_per_call,derived`` lines, including
 the headline comparison of mean early-phase λ_max.
+
+On top of the λ_max trajectory, the END-of-run Hessians get the full
+stochastic-Lanczos-quadrature treatment: ``slq_spectral_density``
+(Gaussian-kernel density from the Ritz/weight stems, averaged over
+``SLQ_SEEDS`` probe vectors) on a shared grid, emitted to
+``experiments/bench/sharpness_slq_{opt}.jsonl`` — the whole-spectrum
+version of the sharpness story (bulk + outliers), not just the top
+eigenvalue.
 """
 from __future__ import annotations
 
@@ -23,7 +31,7 @@ from benchmarks.common import RESULTS_DIR, emit
 from benchmarks.paper_runs import BASE_BATCH, DATA
 from repro.core import build_optimizer
 from repro.data.synthetic import batch_iterator
-from repro.diagnostics import LanczosProbe, SharpnessProbe
+from repro.diagnostics import LanczosProbe, SharpnessProbe, hvp
 from repro.diagnostics import sink as sink_lib
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
 from repro.training import TrainState, classifier_task, fit
@@ -34,6 +42,9 @@ LR = 1.0
 STEPS = 40
 PROBE_EVERY = 5
 LANCZOS_ITERS = 8
+SLQ_SEEDS = 4
+SLQ_ITERS = 16
+SLQ_GRID = 64
 OPTS = ("wa-lars", "tvlars")   # LARS + warm-up vs the contribution
 
 
@@ -44,7 +55,7 @@ def _trajectory(path: str) -> list[tuple[int, float]]:
             if "lanczos/lambda_max" in r]
 
 
-def run_one(opt_name: str, *, steps: int = STEPS) -> str:
+def run_one(opt_name: str, *, steps: int = STEPS):
     params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
                                  num_classes=32, hidden=128)
     opt = build_optimizer(opt_name, total_steps=steps, learning_rate=LR,
@@ -55,13 +66,41 @@ def run_one(opt_name: str, *, steps: int = STEPS) -> str:
     path = os.path.join(RESULTS_DIR, f"sharpness_{opt_name}.jsonl")
     with sink_lib.JsonlSink(path,
                             static={"optimizer": opt_name}) as sink:
-        fit(make_train_step(task, opt), state,
-            batch_iterator(DATA, BATCH), steps, sink=sink,
-            callbacks=[
-                LanczosProbe(task, probe_batch, every=PROBE_EVERY,
-                             num_iters=LANCZOS_ITERS, top_k=1),
-                SharpnessProbe(task, probe_batch, every=PROBE_EVERY),
-            ])
+        state, _ = fit(make_train_step(task, opt), state,
+                       batch_iterator(DATA, BATCH), steps, sink=sink,
+                       callbacks=[
+                           LanczosProbe(task, probe_batch,
+                                        every=PROBE_EVERY,
+                                        num_iters=LANCZOS_ITERS, top_k=1),
+                           SharpnessProbe(task, probe_batch,
+                                          every=PROBE_EVERY),
+                       ])
+    sink_lib.validate_jsonl(path)
+    return path, state, task, probe_batch
+
+
+def slq_density(opt_name: str, state, task, probe_batch, *,
+                step: int) -> str:
+    """End-of-run SLQ spectral density -> one JSONL record
+    (grid/density/ritz/weights lists + sigma)."""
+    from repro.diagnostics.lanczos import slq_spectral_density
+
+    op = hvp.make_flat_hvp(task, state.params, probe_batch)
+    mask = hvp.padding_mask(op.spec)
+    v0s = mask[None] * jax.random.normal(
+        jax.random.PRNGKey(31), (SLQ_SEEDS,) + op.w2d.shape)
+    # grid=None: the library brackets the observed Ritz range itself
+    slq = slq_spectral_density(op.matvec, v0s, SLQ_ITERS,
+                               grid_points=SLQ_GRID)
+    path = os.path.join(RESULTS_DIR, f"sharpness_slq_{opt_name}.jsonl")
+    with sink_lib.JsonlSink(path, static={"optimizer": opt_name}) as sink:
+        sink.write(step, {
+            "grid": [float(x) for x in slq.grid],
+            "density": [float(x) for x in slq.density],
+            "ritz_max": float(slq.ritz.max()),
+            "sigma": float(slq.sigma),
+            "num_seeds": SLQ_SEEDS, "num_iters": SLQ_ITERS,
+        }, last=True)
     sink_lib.validate_jsonl(path)
     return path
 
@@ -69,7 +108,7 @@ def run_one(opt_name: str, *, steps: int = STEPS) -> str:
 def main(steps: int = STEPS) -> None:
     early = {}
     for opt_name in OPTS:
-        path = run_one(opt_name, steps=steps)
+        path, state, task, probe_batch = run_one(opt_name, steps=steps)
         traj = _trajectory(path)
         assert traj, f"no lambda_max records in {path}"
         lams = [lam for _, lam in traj]
@@ -79,6 +118,10 @@ def main(steps: int = STEPS) -> None:
         emit(f"sharpness/{opt_name}", 0.0,
              f"lam0={lams[0]:.3f} lam_final={lams[-1]:.3f} "
              f"n_probes={len(lams)} -> {path}")
+        slq_path = slq_density(opt_name, state, task, probe_batch,
+                               step=steps - 1)
+        emit(f"sharpness/slq_{opt_name}", 0.0,
+             f"{SLQ_SEEDS} seeds x {SLQ_ITERS} iters -> {slq_path}")
     ratio = early["wa-lars"] / max(early["tvlars"], 1e-12)
     emit("sharpness/early_lam_ratio_wa_vs_tvlars", 0.0,
          f"{ratio:.3f} (>1 means warm-up LARS sits in sharper "

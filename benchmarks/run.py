@@ -8,7 +8,10 @@ Prints ``name,us_per_call,derived`` CSV lines; full grids land in
   schedules     Figures 1 & 4: warm-up vs TVLARS φ_t family
   fig2          Figure 2: LWN/LGN/LNR traces (WA/NOWA-LARS, TVLARS)
   ablations     §5.2: λ sweep (Fig 5), target LR (Fig 6), init (Fig 7)
-  sharpness     λ_max(H) early-phase trajectory (WA-LARS vs TVLARS)
+  sharpness     λ_max(H) early-phase trajectory + end-of-run SLQ
+                spectral densities (WA-LARS vs TVLARS)
+  landscape     2-D filter-normalized loss plane between the LARS and
+                TVLARS checkpoints (CsvSink grid)
   adaptive      noise-scale-driven batch controller vs fixed-B baselines
   kernels       Pallas kernel micro-benchmarks
   roofline      §Roofline terms from the dry-run artifacts
@@ -21,7 +24,7 @@ import sys
 import time
 
 SUITES = ("schedules", "kernels", "roofline", "fig2", "table1",
-          "ablations", "ssl", "sharpness", "adaptive")
+          "ablations", "ssl", "sharpness", "landscape", "adaptive")
 
 
 def run_suite(name: str) -> None:
@@ -41,6 +44,8 @@ def run_suite(name: str) -> None:
         from benchmarks import bench_kernels as mod
     elif name == "sharpness":
         from benchmarks import bench_sharpness as mod
+    elif name == "landscape":
+        from benchmarks import bench_landscape as mod
     elif name == "adaptive":
         from benchmarks import bench_adaptive_batch as mod
     elif name == "roofline":

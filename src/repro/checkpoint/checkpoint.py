@@ -4,6 +4,18 @@ No orbax offline, so this is a small self-contained implementation:
 ``save(path, tree)`` / ``restore(path, like=tree)``. Leaf order is the
 tree-flatten order of the structure; ``like`` must match (the usual
 "restore into an abstract state" pattern). Atomic via tmp + rename.
+
+Sharding-aware: ``save`` gathers each leaf to a full host array (so a
+state trained replicated — or sharded — on ANY mesh produces one
+mesh-independent payload) and records the source sharding spec per
+leaf as provenance. ``restore`` places leaves back onto an arbitrary
+target: ``mesh=`` replicates every leaf over the given mesh (the
+layout the shard_map data-parallel trainer expects for params and the
+fused flat substrate), or ``shardings=`` gives explicit per-leaf
+placements; incompatible placements (a PartitionSpec that does not
+divide the leaf's shape) raise a ValueError naming the leaf, shape and
+spec *before* any device transfer — the same fail-early contract as
+the shape/dtype/byte validation below.
 """
 from __future__ import annotations
 
@@ -14,6 +26,15 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec, Sharding
+
+
+def _leaf_sharding_meta(x: Any) -> Optional[dict]:
+    sh = getattr(x, "sharding", None)
+    if not isinstance(sh, NamedSharding):
+        return None
+    return {"spec": str(sh.spec),
+            "mesh": {str(k): int(v) for k, v in sh.mesh.shape.items()}}
 
 
 def save(path: str, tree: Any, *, step: Optional[int] = None) -> None:
@@ -21,16 +42,23 @@ def save(path: str, tree: Any, *, step: Optional[int] = None) -> None:
     arrays = {}
     dtypes = {}
     shapes = {}
+    shardings = {}
     for i, x in enumerate(leaves):
+        # np.asarray gathers a sharded jax.Array to one host buffer —
+        # the payload is mesh-independent by construction
         arr = np.asarray(x)
         dtypes[f"leaf_{i}"] = str(arr.dtype)
         shapes[f"leaf_{i}"] = list(arr.shape)
+        sh = _leaf_sharding_meta(x)
+        if sh is not None:
+            shardings[f"leaf_{i}"] = sh
         if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
             # npz cannot store ml_dtypes (bfloat16 etc.) — byte-view them
             arr = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
         arrays[f"leaf_{i}"] = arr
     meta = {"num_leaves": len(leaves), "treedef": str(treedef),
-            "step": step, "dtypes": dtypes, "shapes": shapes}
+            "step": step, "dtypes": dtypes, "shapes": shapes,
+            "shardings": shardings}
     os.makedirs(path, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=path, suffix=".npz.tmp")
     os.close(fd)
@@ -41,7 +69,45 @@ def save(path: str, tree: Any, *, step: Optional[int] = None) -> None:
         json.dump(meta, f)
 
 
-def restore(path: str, like: Any) -> Any:
+def _resolve_shardings(shardings: Any, mesh: Optional[Mesh],
+                       leaves: list) -> Optional[list]:
+    """Per-leaf placement list (or None for host arrays)."""
+    if shardings is None and mesh is None:
+        return None
+    if shardings is None:
+        rep = NamedSharding(mesh, PartitionSpec())
+        return [rep] * len(leaves)
+    if isinstance(shardings, Sharding):
+        return [shardings] * len(leaves)
+    sh_leaves = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, Sharding) or x is None)
+    if len(sh_leaves) != len(leaves):
+        raise ValueError(
+            f"shardings pytree has {len(sh_leaves)} leaves, template has "
+            f"{len(leaves)} — pass one Sharding, or a tree matching the "
+            f"template structure")
+    return sh_leaves
+
+
+def _check_placeable(i: int, shape: tuple, sh: Sharding) -> None:
+    if not isinstance(sh, Sharding):
+        raise ValueError(
+            f"leaf {i}: sharding entry is {type(sh).__name__}, expected "
+            f"a jax.sharding.Sharding (or None to leave on host)")
+    try:
+        sh.shard_shape(tuple(shape))
+    except Exception as e:
+        spec = getattr(sh, "spec", sh)
+        mesh_shape = dict(getattr(getattr(sh, "mesh", None),
+                                  "shape", {}) or {})
+        raise ValueError(
+            f"leaf {i}: shape {tuple(shape)} cannot be placed with "
+            f"spec {spec} on mesh {mesh_shape} — sharding mismatch "
+            f"between checkpoint and restore target ({e})") from e
+
+
+def restore(path: str, like: Any, *, mesh: Optional[Mesh] = None,
+            shardings: Any = None) -> Any:
     """Restore into the structure of ``like``, validating every leaf.
 
     The stored metadata (num_leaves, per-leaf shape and dtype) is
@@ -51,6 +117,14 @@ def restore(path: str, like: Any) -> Any:
     checkpoint into a fused flat-substrate state, or bf16 bytes into an
     f32 template) — now every mismatch raises a ValueError naming the
     leaf, the checkpoint value and the template value.
+
+    Placement: the payload is mesh-independent, so a state saved from
+    any mesh restores onto any other. ``mesh=`` replicates every leaf
+    over the target mesh (``PartitionSpec()`` — the data-parallel
+    trainer's layout); ``shardings=`` gives explicit placements (one
+    ``Sharding`` for all leaves, or a pytree of them matching the
+    template). Placements that cannot tile the leaf's shape raise
+    before any transfer.
     """
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
@@ -61,9 +135,23 @@ def restore(path: str, like: Any) -> Any:
             f"{len(leaves)} — restoring across optimizer layouts (e.g. "
             f"per-leaf momentum trees vs the fused flat substrate) needs "
             f"a template built with the same use_kernel mode")
+    placements = _resolve_shardings(shardings, mesh, leaves)
     data = np.load(os.path.join(path, "arrays.npz"))
     dtypes = meta.get("dtypes", {})
     shapes = meta.get("shapes", {})
+    if placements is not None:
+        # validate EVERY placement before the first device_put — the
+        # fail-early contract: an indivisible spec on leaf N must not
+        # leave leaves 0..N-1 already transferred to device memory
+        for i, template in enumerate(leaves):
+            if placements[i] is None:
+                continue
+            shape = shapes.get(f"leaf_{i}")
+            if shape is None and template is not None \
+                    and hasattr(template, "shape"):
+                shape = template.shape
+            if shape is not None:
+                _check_placeable(i, tuple(shape), placements[i])
     new_leaves = []
     for i, template in enumerate(leaves):
         key = f"leaf_{i}"
@@ -102,8 +190,22 @@ def restore(path: str, like: Any) -> Any:
                 f"leaf {i}: checkpoint dtype {arr.dtype} != template "
                 f"{template.dtype} — refusing to silently reinterpret; "
                 f"cast the template (or re-save) explicitly")
-        new_leaves.append(jax.numpy.asarray(arr))
+        if placements is not None and placements[i] is not None:
+            # re-check against the ACTUAL payload shape (covers
+            # checkpoints with no recorded shape metadata)
+            _check_placeable(i, arr.shape, placements[i])
+            new_leaves.append(jax.device_put(arr, placements[i]))
+        else:
+            new_leaves.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def saved_shardings(path: str) -> dict:
+    """The per-leaf source-sharding provenance recorded by ``save``
+    (``{"leaf_i": {"spec": str, "mesh": {axis: size}}}``; absent
+    entries were host/single-device arrays)."""
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f).get("shardings", {})
 
 
 def latest_step(path: str) -> Optional[int]:

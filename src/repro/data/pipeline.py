@@ -14,9 +14,10 @@ global batch is ``K × microbatch × data_parallel`` samples.
 """
 from __future__ import annotations
 
-from typing import Any, Iterator
+from typing import Any, Callable, Iterator, Optional
 
 import jax
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -24,14 +25,70 @@ def data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def resolve_data_axes(mesh: Mesh, axes=None) -> tuple[str, ...]:
+    """THE data-axis resolver every ``mesh=`` entry point (train step
+    and probes alike) goes through: the ``("pod", "data")`` subset
+    present in ``mesh``, or explicit ``axes`` validated against it."""
+    if axes is None:
+        return data_axes(mesh)
+    axes = tuple(axes)
+    missing = [a for a in axes if a not in mesh.shape]
+    if missing:
+        raise ValueError(f"data_axes {axes} not in mesh axes "
+                         f"{tuple(mesh.axis_names)}")
+    return axes
+
+
+def resolve_dp_size(mesh: Optional[Mesh], axes=None) -> int:
+    """Data-parallel width of ``mesh`` (1 for ``mesh=None``)."""
+    if mesh is None:
+        return 1
+    return dp_size(mesh, resolve_data_axes(mesh, axes))
+
+
+def shard_over_data(fn: Callable, mesh: Mesh, axes: tuple,
+                    accum_steps: int) -> Callable:
+    """``shard_map`` a ``(replicated..., batch) -> replicated``
+    computation over the data axes: every positional arg except the
+    LAST is replicated, the last is the batch (microbatch dim sharded,
+    the :func:`batch_axes_pspec` layout).  ``fn`` must make its
+    outputs replicated itself (pmean/psum)."""
+    def wrapped(*args):
+        n_rep = len(args) - 1
+        in_specs = (P(),) * n_rep \
+            + (batch_axes_pspec(axes, accum_steps),)
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=P(), check_rep=False)(*args)
+    return wrapped
+
+
+def dp_size(mesh: Mesh, axes: tuple[str, ...] | None = None) -> int:
+    """Total data-parallel width: the product of the data axes."""
+    out = 1
+    for a in (data_axes(mesh) if axes is None else axes):
+        out *= int(mesh.shape[a])
+    return out
+
+
+def batch_axes_pspec(axes, accum_steps: int = 1) -> P:
+    """Batch-leaf spec for explicit data axes — THE one encoding of
+    the batch layout: the microbatch dim shards over ``axes``, the K
+    scan dim (when stacked) stays replicated.  Shared by
+    ``shard_batch``-placed inputs, the trainer's ``shard_map``
+    in_specs, and the probes' — change it here, every mesh consumer
+    follows."""
+    axes = tuple(axes)
+    return P(None, axes) if accum_steps > 1 else P(axes)
+
+
 def batch_pspec(mesh: Mesh) -> P:
-    return P(data_axes(mesh))
+    return batch_axes_pspec(data_axes(mesh))
 
 
 def microbatch_pspec(mesh: Mesh) -> P:
     """Spec for stacked ``[K, B/K, ...]`` leaves: K replicated, B/K
     sharded over the data axes."""
-    return P(None, data_axes(mesh))
+    return batch_axes_pspec(data_axes(mesh), 2)
 
 
 def stack_microbatches(batch: Any, accum_steps: int) -> Any:
@@ -58,10 +115,30 @@ def stack_microbatches(batch: Any, accum_steps: int) -> Any:
 
 def shard_batch(mesh: Mesh, batch: Any, *, batch_dim: int = 0) -> Any:
     """Device-put a pytree of arrays with ``batch_dim`` sharded over the
-    data axes (``batch_dim=1`` for stacked microbatch leaves)."""
+    data axes (``batch_dim=1`` for stacked microbatch leaves).
+
+    A batch dim that does not divide the data-parallel width raises a
+    :class:`ValueError` naming the offending sizes, instead of the
+    opaque GSPMD sharding error jax would produce downstream.
+    """
+    axes = data_axes(mesh)
+    dp = dp_size(mesh)
+
     def place(x):
+        if x.ndim <= batch_dim:
+            raise ValueError(
+                f"shard_batch(batch_dim={batch_dim}): leaf of shape "
+                f"{x.shape} has no dim {batch_dim} to shard over "
+                f"{axes}")
+        if dp > 1 and x.shape[batch_dim] % dp:
+            raise ValueError(
+                f"batch dim {batch_dim} of size {x.shape[batch_dim]} "
+                f"(leaf shape {x.shape}) is not divisible by the "
+                f"data-parallel width {dp} (mesh axes "
+                f"{ {a: int(mesh.shape[a]) for a in axes} }); pick a "
+                f"microbatch that is a multiple of the data width")
         dims = [None] * x.ndim
-        dims[batch_dim] = data_axes(mesh)
+        dims[batch_dim] = axes
         return jax.device_put(x, NamedSharding(mesh, P(*dims)))
     return jax.tree_util.tree_map(place, batch)
 
@@ -73,42 +150,54 @@ def sharded_iterator(mesh: Mesh, host_iter: Iterator, *,
 
 
 class MicrobatchedStream:
-    """Microbatched batch stream whose ``accum_steps`` K can be
-    retargeted mid-stream — the adaptive batch-size controller's
-    re-stack boundary.
+    """Microbatched batch stream whose ``accum_steps`` K *and*
+    ``data_parallel`` D can be retargeted mid-stream — the adaptive
+    batch-size controller's re-stack boundary, now covering both global
+    batch knobs (``global_batch = K × D × microbatch``).
 
     ``source`` is a *sample-level* provider ``(start, count) -> batch
     pytree`` with ``count`` leading-dim samples; sample ``i`` must
     depend only on ``i`` (see ``data.synthetic.*_sample_source``).
-    Each ``next()`` consumes the next ``K × microbatch`` contiguous
+    Each ``next()`` consumes the next ``K × D × microbatch`` contiguous
     samples and advances ``position`` by exactly that — so changing K
-    preserves the epoch position: no sample is skipped or re-read, and
-    a fresh stream started at the same ``position`` sees the identical
-    upcoming samples regardless of how earlier samples were partitioned
-    (the basis of the controller's K-switch parity test).
+    or D preserves the epoch position: no sample is skipped or re-read,
+    and a fresh stream started at the same ``position`` sees the
+    identical upcoming samples regardless of how earlier samples were
+    partitioned (the basis of the controller's switch parity tests).
 
-    Yields ``[K, microbatch, ...]`` stacked leaves for K > 1 and plain
-    ``[microbatch, ...]`` leaves for K = 1, matching what
-    ``make_train_step(accum_steps=K)`` expects in each regime.
+    ``microbatch`` is the PER-DEVICE pass size; the per-pull microbatch
+    dim is ``D × microbatch`` samples, which the train step's
+    ``shard_map`` splits over the data axis. Yields
+    ``[K, D·microbatch, ...]`` stacked leaves for K > 1 and plain
+    ``[D·microbatch, ...]`` leaves for K = 1, matching what
+    ``make_train_step(accum_steps=K, mesh=...)`` expects in each
+    regime. Host-side yields are unplaced; the controller's step
+    wrapper (or the caller) does the ``shard_batch`` placement.
     """
 
     def __init__(self, source, microbatch: int, accum_steps: int = 1,
-                 *, position: int = 0):
+                 *, data_parallel: int = 1, position: int = 0):
         if microbatch < 1:
             raise ValueError(f"microbatch must be >= 1, got {microbatch}")
         self.source = source
         self.microbatch = microbatch
         self.position = position
         self._k = 0
+        self._dp = 0
         self.set_accum_steps(accum_steps)
+        self.set_data_parallel(data_parallel)
 
     @property
     def accum_steps(self) -> int:
         return self._k
 
     @property
+    def data_parallel(self) -> int:
+        return self._dp
+
+    @property
     def global_batch(self) -> int:
-        return self._k * self.microbatch
+        return self._k * self._dp * self.microbatch
 
     def set_accum_steps(self, accum_steps: int) -> None:
         """Retarget K; takes effect from the next ``next()``."""
@@ -117,11 +206,18 @@ class MicrobatchedStream:
                 f"accum_steps must be >= 1, got {accum_steps}")
         self._k = int(accum_steps)
 
+    def set_data_parallel(self, data_parallel: int) -> None:
+        """Retarget D; takes effect from the next ``next()``."""
+        if data_parallel < 1:
+            raise ValueError(
+                f"data_parallel must be >= 1, got {data_parallel}")
+        self._dp = int(data_parallel)
+
     def __iter__(self) -> "MicrobatchedStream":
         return self
 
     def __next__(self):
-        n = self._k * self.microbatch
+        n = self._k * self._dp * self.microbatch
         batch = self.source(self.position, n)
         self.position += n
         if self._k == 1:

@@ -19,6 +19,8 @@ from repro.diagnostics.hvp import (FlatHVP, make_flat_hvp, padding_mask,
 # NB: the ``lanczos`` *function* stays module-scoped
 # (``diagnostics.lanczos.lanczos``) so it doesn't shadow the submodule
 from repro.diagnostics.lanczos import (LanczosResult, lanczos_top_k,
+                                       slq_spectral_density,
+                                       spectral_density,
                                        spectral_density_stem,
                                        top_k_eigenvalues)
 from repro.diagnostics.landscape import (direction_between,
@@ -41,6 +43,6 @@ __all__ = [
     "gradient_noise_scale", "lanczos_top_k", "loss_slice_1d",
     "loss_slice_2d", "make_flat_hvp", "padding_mask", "sam_sharpness",
     "scanned_grads", "scanned_loss", "should_run",
-    "spectral_density_stem", "top_k_eigenvalues", "tree_hvp",
-    "validate_jsonl",
+    "slq_spectral_density", "spectral_density", "spectral_density_stem",
+    "top_k_eigenvalues", "tree_hvp", "validate_jsonl",
 ]

@@ -21,18 +21,35 @@ a gradient tree zero-fills them, so the flat operator is the true tree
 Hessian embedded in the padded space with an exact null space on the
 pad coordinates.  Seed Lanczos with a :func:`padding_mask`-projected
 vector and every Krylov vector stays in the real-parameter subspace.
+
+Mesh-native probing: every entry point takes ``mesh=``/``data_axes=``.
+Under a mesh the probe batch's microbatch dim shards over the data
+axes and the loss / gradient / HVP contractions run per-shard under
+``shard_map`` with one f32 ``pmean`` at the end — probe vectors and
+params stay replicated, so Lanczos/landscape code on top is unchanged
+and the Hessian measured is that of the *global*-batch mean loss.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import flatten
+from repro.data import pipeline
 
 PyTree = Any
+
+
+# the mesh plumbing lives with the rest of the batch-layout code in
+# data/pipeline.py; these aliases keep the diagnostics-local names the
+# probe modules use
+mesh_data_axes = pipeline.resolve_data_axes
+mesh_dp_size = pipeline.resolve_dp_size
+shard_over_data = pipeline.shard_over_data
 
 
 def check_stacked(batch: PyTree, accum_steps: int) -> None:
@@ -51,15 +68,8 @@ def check_stacked(batch: PyTree, accum_steps: int) -> None:
                 f"data.pipeline.stack_microbatches")
 
 
-def scanned_loss(task, params: PyTree, batch: PyTree,
-                 accum_steps: int = 1) -> jnp.ndarray:
-    """Mean task loss over K stacked microbatches (forward only).
-
-    ``accum_steps == 1`` is a plain loss call; K > 1 scans microbatches
-    at fixed peak memory.  Matches the accumulated training objective
-    (mean of per-microbatch mean losses).
-    """
-    check_stacked(batch, accum_steps)
+def _local_loss(task, params: PyTree, batch: PyTree,
+                accum_steps: int) -> jnp.ndarray:
     if accum_steps == 1:
         loss, _ = task.loss_fn(params, batch)
         return loss.astype(jnp.float32)
@@ -72,10 +82,31 @@ def scanned_loss(task, params: PyTree, batch: PyTree,
     return total / accum_steps
 
 
-def scanned_grads(task, params: PyTree, batch: PyTree,
-                  accum_steps: int = 1) -> tuple[jnp.ndarray, PyTree]:
-    """(mean loss, f32 mean grads) over K stacked microbatches."""
+def scanned_loss(task, params: PyTree, batch: PyTree,
+                 accum_steps: int = 1, *, mesh: Optional[Mesh] = None,
+                 data_axes=None) -> jnp.ndarray:
+    """Mean task loss over K stacked microbatches (forward only).
+
+    ``accum_steps == 1`` is a plain loss call; K > 1 scans microbatches
+    at fixed peak memory.  Matches the accumulated training objective
+    (mean of per-microbatch mean losses).  ``mesh=``: the microbatch
+    dim additionally shards over the data axes, per-shard means are
+    pmean-averaged.
+    """
     check_stacked(batch, accum_steps)
+    if mesh_dp_size(mesh, data_axes) == 1:
+        return _local_loss(task, params, batch, accum_steps)
+    axes = mesh_data_axes(mesh, data_axes)
+
+    def local(params, batch):
+        return jax.lax.pmean(
+            _local_loss(task, params, batch, accum_steps), axes)
+
+    return shard_over_data(local, mesh, axes, accum_steps)(params, batch)
+
+
+def _local_grads(task, params: PyTree, batch: PyTree,
+                 accum_steps: int) -> tuple[jnp.ndarray, PyTree]:
     grad_fn = jax.value_and_grad(lambda p, b: task.loss_fn(p, b)[0])
     if accum_steps == 1:
         loss, grads = grad_fn(params, batch)
@@ -97,14 +128,35 @@ def scanned_grads(task, params: PyTree, batch: PyTree,
         lambda g: g / accum_steps, grad_sum)
 
 
+def scanned_grads(task, params: PyTree, batch: PyTree,
+                  accum_steps: int = 1, *, mesh: Optional[Mesh] = None,
+                  data_axes=None) -> tuple[jnp.ndarray, PyTree]:
+    """(mean loss, f32 mean grads) over K stacked microbatches; with
+    ``mesh=`` the per-shard results are pmean-averaged over the data
+    axes (global-batch loss/grads, replicated)."""
+    check_stacked(batch, accum_steps)
+    if mesh_dp_size(mesh, data_axes) == 1:
+        return _local_grads(task, params, batch, accum_steps)
+    axes = mesh_data_axes(mesh, data_axes)
+
+    def local(params, batch):
+        loss, grads = _local_grads(task, params, batch, accum_steps)
+        return (jax.lax.pmean(loss, axes),
+                jax.tree_util.tree_map(
+                    lambda g: jax.lax.pmean(g, axes), grads))
+
+    return shard_over_data(local, mesh, axes, accum_steps)(params, batch)
+
+
 def flat_loss_fn(task, spec: flatten.FlatSpec, batch: PyTree,
-                 accum_steps: int = 1) -> Callable[[jnp.ndarray],
-                                                   jnp.ndarray]:
+                 accum_steps: int = 1, *, mesh: Optional[Mesh] = None,
+                 data_axes=None) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """``loss(w2d)`` on the flat buffer (unpack once, then scan)."""
 
     def loss_of(w2d: jnp.ndarray) -> jnp.ndarray:
         params = flatten.unpack_tree(w2d, spec)
-        return scanned_loss(task, params, batch, accum_steps)
+        return scanned_loss(task, params, batch, accum_steps,
+                            mesh=mesh, data_axes=data_axes)
 
     return loss_of
 
@@ -128,35 +180,54 @@ class FlatHVP(NamedTuple):
 
 
 def make_flat_hvp(task, params: PyTree, batch: PyTree, *,
-                  accum_steps: int = 1) -> FlatHVP:
+                  accum_steps: int = 1, mesh: Optional[Mesh] = None,
+                  data_axes=None) -> FlatHVP:
     """Build ``v2d -> H(loss) @ v2d`` on the flat buffer.
 
     The Hessian is of the *accumulated* mean loss; K > 1 scans one
     per-microbatch jvp-of-grad at a time (linearity of the HVP) so
-    peak memory stays one microbatch regardless of K.
+    peak memory stays one microbatch regardless of K.  ``mesh=``: the
+    probe batch shards over the data axes and per-shard HVPs are
+    pmean-contracted — probe vectors stay replicated, so Lanczos on
+    top runs unchanged (replicated Krylov basis, psum'd matvec).
     """
     check_stacked(batch, accum_steps)
     spec = flatten.build_spec(params)
     w2d = flatten.pack_tree(params, spec)
+    dp = mesh_dp_size(mesh, data_axes)
 
-    def mb_hvp(v2d: jnp.ndarray, microbatch: PyTree) -> jnp.ndarray:
-        def loss_of(w):
-            loss, _ = task.loss_fn(flatten.unpack_tree(w, spec),
-                                   microbatch)
-            return loss.astype(jnp.float32)
+    def local_hvp(w2d_: jnp.ndarray, v2d: jnp.ndarray,
+                  batch_: PyTree) -> jnp.ndarray:
+        def mb_hvp(microbatch):
+            def loss_of(w):
+                loss, _ = task.loss_fn(flatten.unpack_tree(w, spec),
+                                       microbatch)
+                return loss.astype(jnp.float32)
 
-        return jax.jvp(jax.grad(loss_of), (w2d,), (v2d,))[1]
+            return jax.jvp(jax.grad(loss_of), (w2d_,), (v2d,))[1]
 
-    def matvec(v2d: jnp.ndarray) -> jnp.ndarray:
-        v2d = v2d.astype(jnp.float32)
         if accum_steps == 1:
-            return mb_hvp(v2d, batch)
+            return mb_hvp(batch_)
 
         def body(acc, microbatch):
-            return acc + mb_hvp(v2d, microbatch), None
+            return acc + mb_hvp(microbatch), None
 
-        total, _ = jax.lax.scan(body, jnp.zeros_like(w2d), batch)
+        total, _ = jax.lax.scan(body, jnp.zeros_like(w2d_), batch_)
         return total / accum_steps
+
+    if dp == 1:
+        def matvec(v2d: jnp.ndarray) -> jnp.ndarray:
+            return local_hvp(w2d, v2d.astype(jnp.float32), batch)
+    else:
+        axes = mesh_data_axes(mesh, data_axes)
+
+        def sharded(w2d_, v2d, batch_):
+            return jax.lax.pmean(local_hvp(w2d_, v2d, batch_), axes)
+
+        smapped = shard_over_data(sharded, mesh, axes, accum_steps)
+
+        def matvec(v2d: jnp.ndarray) -> jnp.ndarray:
+            return smapped(w2d, v2d.astype(jnp.float32), batch)
 
     return FlatHVP(spec=spec, w2d=w2d, matvec=matvec,
                    dim=sum(spec.sizes))

@@ -20,6 +20,14 @@ Concrete probes:
   via flat-substrate HVPs + m-step Lanczos;
 * :class:`SharpnessProbe` — SAM ε-ball sharpness;
 * :class:`GradNoiseProbe` — McCandlish simple gradient noise scale.
+
+All three take ``mesh=`` to run their contractions data-parallel: the
+held probe batch's microbatch dim shards over the mesh's data axes,
+per-shard losses/grads/HVPs are psum-averaged (probe vectors and
+params replicated), and GradNoiseProbe additionally exploits the
+per-device gradients as the small-batch statistics — under DP the
+noise-scale measurement the adaptive controller feeds on is nearly
+free, and ``accum_steps=1`` is enough at data width ≥ 2.
 """
 from __future__ import annotations
 
@@ -70,6 +78,8 @@ class LanczosProbe:
     accum_steps: int = 1
     reorth: bool = True
     seed: int = 0
+    mesh: Any = None
+    data_axes: Any = None
     name: str = "lanczos"
     _fn: Optional[Any] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
@@ -83,7 +93,9 @@ class LanczosProbe:
     def _build(self):
         def run(params):
             op = hvp.make_flat_hvp(self.task, params, self.batch,
-                                   accum_steps=self.accum_steps)
+                                   accum_steps=self.accum_steps,
+                                   mesh=self.mesh,
+                                   data_axes=self.data_axes)
             v0 = hvp.padding_mask(op.spec) * jax.random.normal(
                 jax.random.PRNGKey(self.seed), op.w2d.shape)
             return lanczos_top_k(op.matvec, v0, self.num_iters,
@@ -109,6 +121,8 @@ class SharpnessProbe:
     every: int = 10
     rho: float = 0.05
     accum_steps: int = 1
+    mesh: Any = None
+    data_axes: Any = None
     name: str = "sharpness"
     _fn: Optional[Any] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
@@ -117,31 +131,42 @@ class SharpnessProbe:
         if self._fn is None:
             self._fn = jax.jit(lambda p: sharpness.sam_sharpness(
                 self.task, p, self.batch, rho=self.rho,
-                accum_steps=self.accum_steps))
+                accum_steps=self.accum_steps, mesh=self.mesh,
+                data_axes=self.data_axes))
         return _host_floats(jax.device_get(self._fn(state.params)))
 
 
 @dataclasses.dataclass
 class GradNoiseProbe:
     """Simple gradient noise scale from the stacked probe batch's
-    per-microbatch gradients (needs ``accum_steps >= 2``)."""
+    per-microbatch gradients.
+
+    Needs two batch sizes to contrast: ``accum_steps >= 2``
+    single-device, or ``mesh=`` with a data-parallel width >= 2 (the
+    per-device gradients are the small-batch samples — nearly free
+    under DP, any ``accum_steps``)."""
     task: Any
     batch: PyTree
     accum_steps: int
     every: int = 10
+    mesh: Any = None
+    data_axes: Any = None
     name: str = "gns"
     _fn: Optional[Any] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
     def __post_init__(self):
-        if self.accum_steps < 2:
-            raise ValueError("GradNoiseProbe needs accum_steps >= 2 "
-                             "(stacked microbatches); got "
-                             f"{self.accum_steps}")
+        dp = hvp.mesh_dp_size(self.mesh, self.data_axes)
+        if self.accum_steps * dp < 2:
+            raise ValueError(
+                "GradNoiseProbe needs accum_steps >= 2 (stacked "
+                "microbatches) or a mesh with data width >= 2; got "
+                f"accum_steps={self.accum_steps}, data_parallel={dp}")
 
     def __call__(self, step: int, state) -> dict[str, float]:
         if self._fn is None:
             self._fn = jax.jit(lambda p: sharpness.gradient_noise_scale(
                 self.task, p, self.batch,
-                accum_steps=self.accum_steps))
+                accum_steps=self.accum_steps, mesh=self.mesh,
+                data_axes=self.data_axes))
         return _host_floats(jax.device_get(self._fn(state.params)))

@@ -15,14 +15,21 @@ spectral probes:
   exactly a high-noise-scale regime.
 
 Both scan microbatches at fixed peak memory (one microbatch of
-activations), like the training step.
+activations), like the training step, and both take ``mesh=`` for the
+data-parallel path.  Under DP the noise-scale estimator is *nearly
+free*: the per-device gradients the shard_map step computes anyway ARE
+the small-batch samples McCandlish needs — with D devices and K scan
+steps the estimator contrasts K·D per-shard norms (b = B/(K·D))
+against the psum-averaged global gradient (B), so ``accum_steps=1``
+suffices whenever the data width is ≥ 2.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.core.base import global_norm
 from repro.diagnostics import hvp
@@ -32,75 +39,128 @@ PyTree = Any
 
 def sam_sharpness(task, params: PyTree, batch: PyTree, *,
                   rho: float = 0.05, accum_steps: int = 1,
+                  mesh: Optional[Mesh] = None, data_axes=None,
                   eps: float = 1e-12) -> dict[str, jnp.ndarray]:
     """SAM-style ε-ball sharpness on a probe batch.
 
     Returns ``{"sam_sharpness", "loss", "perturbed_loss"}`` where
     ``sam_sharpness = loss(w + ρ·g/‖g‖) − loss(w)`` for the
     accumulated mean loss/gradient (≥ 0 up to higher-order terms).
+    With ``mesh=`` both passes run sharded over the data axes on the
+    psum-averaged global gradient — the ascent direction every device
+    agrees on.
     """
-    loss, grads = hvp.scanned_grads(task, params, batch, accum_steps)
+    loss, grads = hvp.scanned_grads(task, params, batch, accum_steps,
+                                    mesh=mesh, data_axes=data_axes)
     gnorm = global_norm(grads)
     perturbed = jax.tree_util.tree_map(
         lambda p, g: (p.astype(jnp.float32)
                       + rho * g / (gnorm + eps)).astype(p.dtype),
         params, grads)
-    perturbed_loss = hvp.scanned_loss(task, perturbed, batch, accum_steps)
+    perturbed_loss = hvp.scanned_loss(task, perturbed, batch, accum_steps,
+                                      mesh=mesh, data_axes=data_axes)
     return {"sam_sharpness": perturbed_loss - loss, "loss": loss,
             "perturbed_loss": perturbed_loss}
 
 
-def _microbatch_size(batch: PyTree) -> int:
+def _microbatch_size(batch: PyTree, accum_steps: int) -> int:
     leaf = jax.tree_util.tree_leaves(batch)[0]
-    if leaf.ndim < 2:
-        raise ValueError(
-            f"stacked probe batch leaves need a [K, B/K, ...] shape; "
-            f"got {leaf.shape}")
-    return int(leaf.shape[1])
+    if accum_steps > 1:
+        if leaf.ndim < 2:
+            raise ValueError(
+                f"stacked probe batch leaves need a [K, B/K, ...] shape; "
+                f"got {leaf.shape}")
+        return int(leaf.shape[1])
+    return int(leaf.shape[0])
 
 
-def gradient_noise_scale(task, params: PyTree, batch: PyTree, *,
-                         accum_steps: int,
-                         eps: float = 1e-12) -> dict[str, jnp.ndarray]:
-    """Simple gradient noise scale from per-microbatch gradients.
-
-    ``batch`` must be stacked ``[K, B/K, ...]`` with K ≥ 2.  With
-    ``b = B/K`` and ``B = K·b``, the unbiased estimators
-
-        ‖G‖²   ≈ (B·‖g_B‖² − b·E[‖g_b‖²]) / (B − b)
-        tr(Σ)  ≈ (E[‖g_b‖²] − ‖g_B‖²) / (1/b − 1/B)
-
-    give ``B_noise = tr(Σ)/‖G‖²`` — the McCandlish et al. critical
-    batch size.  Returns ``{"grad_noise_scale", "grad_sq",
-    "trace_cov"}`` (``grad_sq`` clamped to ≥ 0 before the ratio; in a
-    noise-dominated regime the ``‖G‖²`` estimate can go negative, so
-    the reported scale saturates rather than flipping sign).
-    """
-    if accum_steps < 2:
-        raise ValueError("gradient_noise_scale needs accum_steps >= 2 "
-                         "(two microbatch sizes to contrast); got "
-                         f"{accum_steps}")
-    hvp.check_stacked(batch, accum_steps)
-    b_small = _microbatch_size(batch)
-    b_big = accum_steps * b_small
-    grad_fn = jax.grad(lambda p, mb: task.loss_fn(p, mb)[0])
-
-    def body(carry, microbatch):
-        grad_acc, sq_acc = carry
-        g = grad_fn(params, microbatch)
-        grad_acc = jax.tree_util.tree_map(
-            lambda a, x: a + x.astype(jnp.float32), grad_acc, g)
-        return (grad_acc, sq_acc + global_norm(g) ** 2), None
-
-    carry0 = (jax.tree_util.tree_map(
-        lambda p: jnp.zeros(p.shape, jnp.float32), params),
-        jnp.zeros((), jnp.float32))
-    (grad_sum, sq_sum), _ = jax.lax.scan(body, carry0, batch)
-    g_big = jax.tree_util.tree_map(lambda g: g / accum_steps, grad_sum)
-    s_big = global_norm(g_big) ** 2          # ‖g_B‖²
-    s_small = sq_sum / accum_steps           # E[‖g_b‖²]
+def _gns_from_norms(s_small, s_big, b_small: int, b_big: int,
+                    eps: float) -> dict[str, jnp.ndarray]:
+    """McCandlish estimators from E[‖g_b‖²] and ‖g_B‖²."""
     grad_sq = (b_big * s_big - b_small * s_small) / (b_big - b_small)
     trace_cov = (s_small - s_big) / (1.0 / b_small - 1.0 / b_big)
     noise_scale = trace_cov / jnp.maximum(grad_sq, eps)
     return {"grad_noise_scale": noise_scale, "grad_sq": grad_sq,
             "trace_cov": trace_cov}
+
+
+def gradient_noise_scale(task, params: PyTree, batch: PyTree, *,
+                         accum_steps: int,
+                         mesh: Optional[Mesh] = None, data_axes=None,
+                         eps: float = 1e-12) -> dict[str, jnp.ndarray]:
+    """Simple gradient noise scale from per-microbatch gradients.
+
+    Single-device: ``batch`` must be stacked ``[K, B/K, ...]`` with
+    K ≥ 2.  With ``b = B/K`` and ``B = K·b``, the unbiased estimators
+
+        ‖G‖²   ≈ (B·‖g_B‖² − b·E[‖g_b‖²]) / (B − b)
+        tr(Σ)  ≈ (E[‖g_b‖²] − ‖g_B‖²) / (1/b − 1/B)
+
+    give ``B_noise = tr(Σ)/‖G‖²`` — the McCandlish et al. critical
+    batch size.  Under ``mesh=`` with data width D the small-batch
+    samples are the K·D per-device per-microbatch gradients
+    (b = B/(K·D)) and the big batch is the psum-averaged global
+    gradient — the per-shard statistics exist anyway under DP, so the
+    estimate is nearly free and K ≥ 2 is only required when D == 1.
+    Returns ``{"grad_noise_scale", "grad_sq", "trace_cov"}``
+    (``grad_sq`` clamped to ≥ 0 before the ratio; in a noise-dominated
+    regime the ``‖G‖²`` estimate can go negative, so the reported scale
+    saturates rather than flipping sign).
+    """
+    dp = hvp.mesh_dp_size(mesh, data_axes)
+    if accum_steps * dp < 2:
+        raise ValueError(
+            "gradient_noise_scale needs two batch sizes to contrast: "
+            "accum_steps >= 2 single-device, or a mesh with data "
+            f"width >= 2 (got accum_steps={accum_steps}, "
+            f"data_parallel={dp})")
+    hvp.check_stacked(batch, accum_steps)
+    b_small_global = _microbatch_size(batch, accum_steps)
+    if b_small_global % dp:
+        raise ValueError(
+            f"probe microbatch {b_small_global} does not split over the "
+            f"data-parallel width {dp}")
+    b_small = b_small_global // dp
+    b_big = accum_steps * b_small_global
+    grad_fn = jax.grad(lambda p, mb: task.loss_fn(p, mb)[0])
+
+    def local_norms(params, batch):
+        """(E[‖g_b‖²] over local microbatches, local mean grads)."""
+        if accum_steps == 1:
+            g = grad_fn(params, batch)
+            g32 = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.float32), g)
+            return global_norm(g32) ** 2, g32
+
+        def body(carry, microbatch):
+            grad_acc, sq_acc = carry
+            g = grad_fn(params, microbatch)
+            grad_acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), grad_acc, g)
+            return (grad_acc, sq_acc + global_norm(g) ** 2), None
+
+        carry0 = (jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            jnp.zeros((), jnp.float32))
+        (grad_sum, sq_sum), _ = jax.lax.scan(body, carry0, batch)
+        return sq_sum / accum_steps, jax.tree_util.tree_map(
+            lambda g: g / accum_steps, grad_sum)
+
+    if dp == 1:
+        s_small, g_big = local_norms(params, batch)
+        s_big = global_norm(g_big) ** 2
+        return _gns_from_norms(s_small, s_big, b_small, b_big, eps)
+
+    axes = hvp.mesh_data_axes(mesh, data_axes)
+
+    def sharded(params, batch):
+        sq_local, g_local = local_norms(params, batch)
+        s_small = jax.lax.pmean(sq_local, axes)
+        g_big = jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, axes), g_local)
+        s_big = global_norm(g_big) ** 2
+        return s_small, s_big
+
+    s_small, s_big = hvp.shard_over_data(
+        sharded, mesh, axes, accum_steps)(params, batch)
+    return _gns_from_norms(s_small, s_big, b_small, b_big, eps)

@@ -2,16 +2,31 @@
 
 Builds the mesh from the available devices, shards TrainState + batches
 with the production rules, and runs the jit'd train_step on synthetic LM
-data. On this CPU container it runs with a (1,1) mesh (the same code
-path scales to the pod meshes — proven by the dry-run).
+data.
+
+Distributed execution (``--mesh-data D`` / ``--mesh-model M``): an
+EXPLICIT ``--mesh-data D`` with ``M == 1`` and ``D > 1`` selects the
+MESH-NATIVE data-parallel path — loss + accumulation under
+``shard_map`` over the ``data`` axis, params/optimizer state
+replicated, grads psum-averaged in f32, the fused optimizer still
+exactly two ``pallas_call``s per device — and the global batch is
+``K × D × microbatch`` (``--microbatch`` is PER-DEVICE there).  With
+``M > 1``, or via the legacy ``--data-parallel`` spelling, the GSPMD
+path (fsdp + TP in_shardings, ``--microbatch`` global) runs
+instead.  On CPU, ``D×M > 1`` fabricates host devices automatically
+by setting
+``XLA_FLAGS=--xla_force_host_platform_device_count=D*M`` before the
+first jax device access (the flag only affects the host platform, so
+it is inert on real TPU/GPU runs).
 
 Large-batch execution: ``--global-batch`` is the total samples per
 optimizer step and ``--microbatch`` the per-device-pass batch; when they
-differ the step scan-accumulates K = global/micro microbatches in f32
-and applies the optimizer once per global step (two ``pallas_call``s
-under ``use_kernel="fused"``, regardless of K). The optimizer/schedule
-are built from the *global* batch size — that is what the paper's
-batch-size LR scaling (§5.2.2) and TVLARS's γ_min (§5.2.1) key off.
+differ the step scan-accumulates K = global/(micro·D) microbatches in
+f32 and applies the optimizer once per global step (two
+``pallas_call``s under ``use_kernel="fused"``, regardless of K). The
+optimizer/schedule are built from the *global* batch size — that is
+what the paper's batch-size LR scaling (§5.2.2) and TVLARS's γ_min
+(§5.2.1) key off.
 
 Sharpness probes (``repro.diagnostics``): ``--probe-every N`` runs an
 m-step Lanczos λ_max(H) probe on a held batch every N steps (a
@@ -34,6 +49,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -53,7 +69,7 @@ from repro.models import layers as layers_lib
 from repro.training import tasks
 from repro.training.controller import (AdaptiveBatchController,
                                        ControllerConfig)
-from repro.training.train_state import TrainState
+from repro.training.train_state import TrainState, replicate
 from repro.training.trainer import make_train_step
 
 
@@ -76,6 +92,19 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--mesh-data", type=int, default=None,
+                    help="data axis of the device mesh (alias of "
+                         "--data-parallel); D > 1 with --mesh-model 1 "
+                         "runs the shard_map data-parallel step with "
+                         "the batch sharded over D devices "
+                         "(--microbatch is PER DEVICE). On CPU, "
+                         "missing devices are fabricated via "
+                         "XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count automatically")
+    ap.add_argument("--mesh-model", type=int, default=None,
+                    help="model axis of the device mesh (alias of "
+                         "--model-parallel); M > 1 uses the legacy "
+                         "GSPMD fsdp+TP path")
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--probe-every", type=int, default=0,
                     help="run the Lanczos sharpness probe every N steps "
@@ -109,6 +138,29 @@ def main() -> None:
                     help="adaptive-batch decision cadence in steps")
     args = ap.parse_args()
 
+    mesh_data = args.mesh_data if args.mesh_data is not None \
+        else args.data_parallel
+    mesh_model = args.mesh_model if args.mesh_model is not None \
+        else args.model_parallel
+    if mesh_data < 1 or mesh_model < 1:
+        raise SystemExit(f"--mesh-data {mesh_data} and --mesh-model "
+                         f"{mesh_model} must be >= 1")
+    need = mesh_data * mesh_model
+    flags = os.environ.get("XLA_FLAGS", "")
+    if need > 1 and "xla_force_host_platform_device_count" not in flags:
+        # fabricate host devices BEFORE the first jax device access;
+        # the flag only affects the host (CPU) platform, so it is
+        # inert on real TPU/GPU backends
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={need}"
+        ).strip()
+    # the shard_map DP path (batch over devices, params replicated) is
+    # opted into by the EXPLICIT --mesh-data flag; legacy
+    # --data-parallel keeps its GSPMD semantics (--microbatch stays a
+    # global per-pass size there, vs per-device under mesh-native)
+    mesh_native = args.mesh_data is not None and mesh_model == 1 \
+        and mesh_data > 1
+
     global_batch = args.global_batch if args.global_batch is not None \
         else args.batch
     microbatch = args.microbatch if args.microbatch is not None \
@@ -116,17 +168,28 @@ def main() -> None:
     if global_batch < 1 or microbatch < 1:
         raise SystemExit(f"--global-batch {global_batch} and --microbatch "
                          f"{microbatch} must be >= 1")
-    if global_batch % microbatch:
-        raise SystemExit(f"--global-batch {global_batch} must be divisible "
-                         f"by --microbatch {microbatch}")
-    accum_steps = global_batch // microbatch
+    # adaptive runs start at D=1 (the controller grows D itself), so
+    # only the FIXED mesh-native path divides the pull by the data
+    # width up front
+    per_pull = microbatch * (
+        mesh_data if mesh_native and not args.adaptive_batch else 1)
+    if global_batch % per_pull:
+        raise SystemExit(
+            f"--global-batch {global_batch} must be divisible by "
+            f"--microbatch x data width = {microbatch} x "
+            f"{per_pull // microbatch} = {per_pull} (global batch is "
+            f"K x D x per-device microbatch)")
+    accum_steps = global_batch // per_pull
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "ssm" or cfg.family == "hybrid":
         assert args.seq % cfg.ssm_chunk == 0, \
             f"--seq must divide ssm_chunk={cfg.ssm_chunk}"
     model = get_model(cfg)
-    mesh = make_host_mesh(args.data_parallel, args.model_parallel)
+    try:
+        mesh = make_host_mesh(mesh_data, mesh_model)
+    except ValueError as e:
+        raise SystemExit(str(e)) from e
 
     def optimizer_for(batch_size: int):
         # schedules/γ_min see the TRUE global batch (samples per
@@ -137,11 +200,16 @@ def main() -> None:
 
     controller = None
     if args.adaptive_batch:
-        if mesh.size > 1:
+        if need > 1 and not mesh_native:
             raise SystemExit(
-                "--adaptive-batch runs on the (1,1) single-host mesh; "
-                "mid-stream re-stacking does not yet compose with "
-                "multi-device shardings")
+                "--adaptive-batch composes with the shard_map data "
+                "axis only: pass --mesh-data (with --mesh-model 1); "
+                "the GSPMD fsdp+TP path has no re-stack boundary")
+        if mesh_data & (mesh_data - 1):
+            raise SystemExit(
+                f"--adaptive-batch: --mesh-data {mesh_data} must be a "
+                f"power of two (the controller snaps D to powers of "
+                f"two)")
         batch_min = args.batch_min if args.batch_min is not None \
             else microbatch
         batch_max = args.batch_max if args.batch_max is not None \
@@ -150,12 +218,17 @@ def main() -> None:
             ccfg = ControllerConfig(microbatch=microbatch,
                                     batch_min=batch_min,
                                     batch_max=batch_max,
-                                    every=args.controller_every)
+                                    every=args.controller_every,
+                                    data_max=mesh_data)
         except ValueError as e:
             raise SystemExit(f"--adaptive-batch: {e}") from e
+        if global_batch % microbatch:
+            raise SystemExit(
+                f"--adaptive-batch: --global-batch {global_batch} must "
+                f"be a multiple of --microbatch {microbatch}")
         # held GNS probe batch: stacked at K >= 2 (the estimator
         # contrasts per-microbatch vs accumulated gradient norms)
-        k_probe = max(2, accum_steps)
+        k_probe = max(2, global_batch // microbatch)
         ptoks, plabels = lm_batch(jax.random.PRNGKey(998),
                                   k_probe * microbatch, args.seq,
                                   cfg.vocab_size)
@@ -164,14 +237,22 @@ def main() -> None:
         if es_probe is not None:
             gns_batch["extra_embeds"] = jnp.zeros(es_probe, cfg.cdtype)
         gns_batch = pipeline.stack_microbatches(gns_batch, k_probe)
+        if ccfg.data_max > 1:
+            def make_step(opt_, k, mesh_):
+                return make_train_step(model, opt_, accum_steps=k,
+                                       mesh=mesh_)
+        else:
+            def make_step(opt_, k):
+                return make_train_step(model, opt_, accum_steps=k)
         try:
             controller = AdaptiveBatchController(
-                lambda opt_, k: make_train_step(model, opt_,
-                                                accum_steps=k),
+                make_step,
                 optimizer_for,
                 probes.GradNoiseProbe(tasks.lm_task(model), gns_batch,
                                       accum_steps=k_probe,
                                       every=args.controller_every),
+                # init_data_parallel=None: the controller fills the
+                # data axis from step 0 (fill-data-first policy)
                 ccfg, init_batch=global_batch,
                 base_lr=args.learning_rate,
                 # same donation policy as the fixed path / trainer.fit
@@ -184,15 +265,21 @@ def main() -> None:
     rng = jax.random.PRNGKey(0)
 
     with mesh:
-        if mesh.size > 1:
+        if mesh.size > 1 and not mesh_native:
             layers_lib.set_batch_sharding(
-                ("data",) if microbatch % args.data_parallel == 0 else None,
-                model_size=args.model_parallel, mesh=mesh)
+                ("data",) if microbatch % mesh_data == 0 else None,
+                model_size=mesh_model, mesh=mesh)
         state = TrainState.create(model.init(rng), opt)
-        state_sh = sharding.named(
-            mesh, sharding.state_pspecs(
-                mesh, jax.eval_shape(lambda: state), fsdp=True))
-        state = jax.device_put(state, state_sh)
+        if mesh_native:
+            # shard_map DP: params + flat substrate replicated over
+            # the data axis; the step psums grads internally
+            state = replicate(state, mesh) if controller is None \
+                else state
+        else:
+            state_sh = sharding.named(
+                mesh, sharding.state_pspecs(
+                    mesh, jax.eval_shape(lambda: state), fsdp=True))
+            state = jax.device_put(state, state_sh)
         stream = None
         if controller is not None:
             # sample-level source: position-preserving across K switches
@@ -209,6 +296,11 @@ def main() -> None:
                                                  accum_steps=accum_steps)
             controller.attach(stream)
             step_fn = None
+        elif mesh_native:
+            step_fn = jax.jit(make_train_step(model, opt,
+                                              accum_steps=accum_steps,
+                                              mesh=mesh),
+                              donate_argnums=(0,))
         else:
             step_fn = jax.jit(make_train_step(model, opt,
                                               accum_steps=accum_steps),
@@ -218,7 +310,9 @@ def main() -> None:
         es = extra_embed_shape(cfg, global_batch)
         batch_dim = 1 if accum_steps > 1 else 0
         print(f"global_batch={global_batch} microbatch={microbatch} "
-              f"accum_steps={accum_steps} mesh={tuple(mesh.shape.items())}")
+              f"accum_steps={accum_steps} "
+              f"data_parallel={mesh_data if mesh_native else 1} "
+              f"mesh={tuple(mesh.shape.items())}")
 
         static = {"arch": args.arch, "optimizer": args.optimizer}
         if controller is None:
@@ -242,6 +336,9 @@ def main() -> None:
                 tasks.lm_task(model), pbatch, every=args.probe_every,
                 num_iters=args.probe_iters, top_k=args.probe_topk,
                 accum_steps=accum_steps,
+                # mesh-native runs probe data-parallel too: per-shard
+                # HVPs, psum'd contractions, replicated Krylov basis
+                mesh=mesh if mesh_native and controller is None else None,
                 reorth=not args.probe_no_reorth)
 
         t0 = time.time()
@@ -293,6 +390,7 @@ def main() -> None:
                 print(f"step {i:4d} controller "
                       f"B_noise={out['b_noise']:.1f} "
                       f"global_batch={int(out['global_batch'])} "
+                      f"D={int(out.get('data_parallel', 1))} "
                       f"K={int(out['accum_steps'])} "
                       f"lr={out['lr']:.4f}"
                       + (" [switched]" if out["changed"] else ""))

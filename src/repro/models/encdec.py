@@ -87,7 +87,7 @@ def apply_encdec_hidden(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
         return _dec_layer_apply(lp, cfg, h, positions, mask, enc), None
 
     h = T.scan_layers(body, h, params["decoder"], cfg.remat)
-    return L.norm(cfg, params["final_norm"], h), T.ZERO_AUX
+    return L.norm(cfg, params["final_norm"], h), T.zero_aux()
 
 
 def apply_encdec(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,

@@ -62,7 +62,7 @@ def apply_ssm_lm_hidden(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
         return _mamba_block(block_params, cfg, h), None
 
     h = T.scan_layers(body, h, params["blocks"], cfg.remat)
-    return L.norm(cfg, params["final_norm"], h), T.ZERO_AUX
+    return L.norm(cfg, params["final_norm"], h), T.zero_aux()
 
 
 def apply_ssm_lm(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
@@ -154,7 +154,7 @@ def apply_hybrid_lm_hidden(cfg: ModelConfig, params: dict,
         def inner(h2, bp):
             return _mamba_block(bp, cfg, h2), None
         h, _ = jax.lax.scan(inner, h, params["trailing"])
-    return L.norm(cfg, params["final_norm"], h), T.ZERO_AUX
+    return L.norm(cfg, params["final_norm"], h), T.zero_aux()
 
 
 def apply_hybrid_lm(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,

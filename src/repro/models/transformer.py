@@ -32,7 +32,15 @@ class LMAux(NamedTuple):
     router_z_loss: jnp.ndarray
 
 
-ZERO_AUX = LMAux(jnp.zeros(()), jnp.zeros(()))
+def zero_aux() -> LMAux:
+    """Fresh all-zero aux losses.
+
+    A function, not a module constant: a module-level ``jnp.zeros``
+    initializes the jax backend at IMPORT time, which silently pins the
+    device count before launchers can set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count`` (the mesh.py
+    import contract)."""
+    return LMAux(jnp.zeros(()), jnp.zeros(()))
 
 
 # --------------------------------------------------------------------------
@@ -69,7 +77,7 @@ def layer_apply(params: dict, cfg: ModelConfig, h: jnp.ndarray,
     if "moe" in params:
         y, aux = M.moe_apply(params["moe"], cfg, x)
         return h + y, LMAux(aux.load_balance_loss, aux.router_z_loss)
-    return h + L.mlp(params["mlp"], cfg, x), ZERO_AUX
+    return h + L.mlp(params["mlp"], cfg, x), zero_aux()
 
 
 def layer_decode(params: dict, cfg: ModelConfig, h: jnp.ndarray,
@@ -234,7 +242,8 @@ def apply_lm_hidden(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
                               masks, kv_src, aux)
         return (h, aux), None
 
-    h, aux = scan_layers(body, (h, ZERO_AUX), params["groups"], cfg.remat)
+    h, aux = scan_layers(body, (h, zero_aux()), params["groups"],
+                         cfg.remat)
     return L.norm(cfg, params["final_norm"], h), aux
 
 

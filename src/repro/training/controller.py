@@ -2,34 +2,45 @@
 
 The first *feedback* path in the system: the measurement subsystem
 (PR 3's ``GradNoiseProbe``) steers the execution engine (PR 2's
-scan-accumulated train step).  McCandlish et al.'s critical-batch-size
-analysis says the simple gradient noise scale ``B_noise = tr(Σ)/‖G‖²``
-estimates the batch size where data parallelism stops paying: training
-at B ≪ B_noise wastes optimizer steps on noise-dominated gradients,
-B ≫ B_noise wastes samples.  The paper's TVLARS story adds the twist
-that early-phase gradient noise is a *feature* — it is what escapes the
-sharp minimizers warm-up LARS falls into — and B_noise is small early
-and grows as ‖G‖² shrinks, so the controller naturally reproduces the
+scan-accumulated train step, PR 5's mesh-native shard_map step).
+McCandlish et al.'s critical-batch-size analysis says the simple
+gradient noise scale ``B_noise = tr(Σ)/‖G‖²`` estimates the batch size
+where data parallelism stops paying: training at B ≪ B_noise wastes
+optimizer steps on noise-dominated gradients, B ≫ B_noise wastes
+samples.  The paper's TVLARS story adds the twist that early-phase
+gradient noise is a *feature* — it is what escapes the sharp
+minimizers warm-up LARS falls into — and B_noise is small early and
+grows as ‖G‖² shrinks, so the controller naturally reproduces the
 McCandlish schedule: small batch (noisy, exploratory) early, large
 batch late.
 
-Mechanically the control variable is ``K = accum_steps`` at **fixed
-microbatch size**: global batch ``B = K × microbatch``.  Changing K
-only changes the length of the accumulation scan axis, so peak memory
-(one microbatch of activations + one f32 grad accumulator) never
-moves, and under ``use_kernel="fused"`` every global step is still
-exactly two ``pallas_call``s at any K.
+Mechanically the controller owns TWO knobs at **fixed per-device
+microbatch size**: the data-parallel width D (how many devices the
+microbatch spreads over — ``config.data_max`` caps it at the mesh's
+data width) and the accumulation depth K (how many scan steps), with
+``global batch B = D × K × microbatch``.  The snap policy fills the
+data axis FIRST — extra batch lands on more devices, where it buys
+wall-clock, before it lands on more scan steps, which only buy memory
+— exactly the regime the paper's large-batch premise (LARS at 32K)
+assumes.  Changing K only changes the length of the accumulation scan
+axis and changing D only changes how many shards psum into the global
+gradient, so peak per-device memory (one microbatch of activations +
+one f32 grad accumulator) never moves, and under ``use_kernel="fused"``
+every global step is still exactly two ``pallas_call``s per device at
+any (D, K).
 
-LR co-scaling: each visited K compiles its own train step whose
+LR co-scaling: each visited (D, K) compiles its own train step whose
 optimizer is built by ``optimizer_factory(global_batch)`` at the batch
 it will actually train at, so the LR (and TVLARS's γ_min) always
 reflect the *current* global batch; the stateful
 ``schedules.batch_scaled_lr(batch_size_fn=)`` path reports the
 in-effect LR (``controller.lr`` / the ``controller/lr`` metric), and
-the K-switch parity tests pin it to the optimizer actually built.
+the switch parity tests pin it to the optimizer actually built.
 Optimizer **state** (momentum / Adam moments) depends only on the
-params tree, so it carries across K switches unchanged; compiled steps
-are cache-keyed by K, so revisiting a K is free (zero recompiles).
+params tree, so it carries across switches unchanged — jit reshards
+the replicated state across the per-D meshes automatically; compiled
+steps are cache-keyed by (D, K), so revisiting a pair is free (zero
+recompiles).
 
 The controller is itself a :class:`repro.diagnostics.probes.Probe`
 (``name="controller"``, runs every ``config.every`` steps), so
@@ -43,9 +54,11 @@ import math
 from typing import Any, Callable, Optional
 
 import jax
+from jax.sharding import Mesh
 
 from repro.core import schedules
 from repro.core.base import GradientTransform
+from repro.data import pipeline
 
 SNAP_MODES = ("pow2", "linear")
 
@@ -54,7 +67,8 @@ SNAP_MODES = ("pow2", "linear")
 class ControllerConfig:
     """Decision-rule knobs for :class:`AdaptiveBatchController`.
 
-    ``microbatch``   fixed per-pass batch; K = global / microbatch.
+    ``microbatch``   fixed PER-DEVICE pass batch;
+                     global = D·K·microbatch.
     ``batch_min/max``  global-batch clamp (inclusive); both must be
                      K·microbatch-representable under ``snap``.
     ``every``        decision cadence in global steps (probe boundary).
@@ -65,6 +79,9 @@ class ControllerConfig:
                      (0 = trust each probe reading outright).
     ``snap``         "pow2" snaps K to powers of two (few compiled
                      steps); "linear" allows any integer K.
+    ``data_max``     maximum data-parallel width D (power of two; 1 =
+                     the legacy K-only controller). D itself always
+                     snaps to a power of two — mesh shapes are.
     """
     microbatch: int
     batch_min: int
@@ -73,6 +90,7 @@ class ControllerConfig:
     deadband: float = 0.25
     ema: float = 0.5
     snap: str = "pow2"
+    data_max: int = 1
 
     def __post_init__(self):
         if self.microbatch < 1:
@@ -99,6 +117,10 @@ class ControllerConfig:
                              f"got {self.deadband}")
         if self.snap not in SNAP_MODES:
             raise ValueError(f"snap={self.snap!r}; one of {SNAP_MODES}")
+        if self.data_max < 1 or self.data_max & (self.data_max - 1):
+            raise ValueError(
+                f"data_max={self.data_max} must be a power of two >= 1 "
+                f"(mesh data widths are)")
 
     @property
     def k_min(self) -> int:
@@ -111,7 +133,7 @@ class ControllerConfig:
 
 def snap_accum_steps(target_batch: float, cfg: ControllerConfig) -> int:
     """Map a target global batch onto a representable K in
-    [k_min, k_max]: round to the nearest ``snap`` point of
+    [k_min, k_max] at D=1: round to the nearest ``snap`` point of
     ``K × microbatch`` (nearest power-of-two K for "pow2")."""
     k = max(float(target_batch) / cfg.microbatch, 1e-9)
     if cfg.snap == "pow2":
@@ -119,36 +141,95 @@ def snap_accum_steps(target_batch: float, cfg: ControllerConfig) -> int:
     return int(min(max(round(k), cfg.k_min), cfg.k_max))
 
 
-def decide_global_batch(b_noise: float, current_batch: int,
-                        cfg: ControllerConfig) -> int:
-    """The B_noise → global-batch decision rule (pure, host-side).
+def snap_targets(target_batch: float,
+                 cfg: ControllerConfig) -> tuple[int, int]:
+    """Map a target global batch onto representable ``(D, K)``.
 
-    Target the noise scale itself (McCandlish: B* ≈ B_noise), snap to a
-    representable K·microbatch, clamp to [batch_min, batch_max], and
-    hold — return ``current_batch`` unchanged — when the candidate is
-    within the relative deadband of the current batch.  A non-finite or
+    Fill-data-first policy: D gets the largest power of two that the
+    target covers (≤ ``data_max``, and never past ``batch_max``), K
+    absorbs the remainder under the config's ``snap``/clamp rules —
+    so growing batch buys devices before it buys scan steps, and the
+    (D=1) behaviour is exactly :func:`snap_accum_steps`.
+    """
+    f = max(float(target_batch) / cfg.microbatch, 1e-9)
+
+    def k_bounds(d: int) -> tuple[int, int]:
+        per = d * cfg.microbatch
+        return max(1, -(-cfg.batch_min // per)), cfg.batch_max // per
+
+    d = 1
+    if cfg.data_max > 1 and f > 1.0:
+        d = 2 ** int(math.floor(math.log2(min(f, cfg.data_max))))
+        # shrink D until a K exists with batch_min <= D·K·mb <=
+        # batch_max (k_lo rounds batch_min UP to a D·mb multiple, which
+        # can overshoot batch_max when batch_min is not one — always
+        # resolvable at D=1 since batch_min itself is a mb multiple)
+        while d > 1 and k_bounds(d)[0] * d * cfg.microbatch \
+                > cfg.batch_max:
+            d //= 2
+    k_lo, k_hi = k_bounds(d)
+    k = max(f / d, 1e-9)
+    if cfg.snap == "pow2":
+        k = 2.0 ** round(math.log2(k))
+    k = int(min(max(round(k), k_lo), k_hi))
+    return d, k
+
+
+def decide_targets(b_noise: float, current_batch: int,
+                   cfg: ControllerConfig) -> Optional[tuple[int, int]]:
+    """The B_noise → (D, K) decision rule (pure, host-side).
+
+    Target the noise scale itself (McCandlish: B* ≈ B_noise), snap to
+    a representable D·K·microbatch, clamp to [batch_min, batch_max],
+    and hold — return ``None`` — when the candidate is within the
+    relative deadband of the current batch.  A non-finite or
     non-positive B_noise (noise-dominated ‖G‖² estimate) always holds.
     """
     if not math.isfinite(b_noise) or b_noise <= 0.0:
-        return current_batch
-    candidate = snap_accum_steps(b_noise, cfg) * cfg.microbatch
+        return None
+    d, k = snap_targets(b_noise, cfg)
+    candidate = d * k * cfg.microbatch
     if candidate == current_batch:
-        return current_batch
+        return None
     if abs(candidate - current_batch) <= cfg.deadband * current_batch:
+        return None
+    return d, k
+
+
+def decide_global_batch(b_noise: float, current_batch: int,
+                        cfg: ControllerConfig) -> int:
+    """Back-compat wrapper: the decided global batch as one int
+    (``current_batch`` when the rule holds)."""
+    decided = decide_targets(b_noise, current_batch, cfg)
+    if decided is None:
         return current_batch
-    return candidate
+    d, k = decided
+    return d * k * cfg.microbatch
+
+
+def _default_mesh_factory(d: int) -> Mesh:
+    """A ("data", "model") mesh over the first ``d`` devices — stable
+    prefix so per-D meshes share devices and jit reshards state across
+    them (``launch.mesh.make_data_mesh``, which also owns the
+    clear-device-budget ValueError)."""
+    from repro.launch.mesh import make_data_mesh
+    return make_data_mesh(d)
 
 
 class AdaptiveBatchController:
-    """Closed-loop batch-size controller: B_noise probe → K retarget →
-    LR re-scale, as a trainer callback (see module docstring).
+    """Closed-loop batch-size controller: B_noise probe → (D, K)
+    retarget → LR re-scale, as a trainer callback (see module
+    docstring).
 
     Parameters
     ----------
     make_step:
-        ``(optimizer, accum_steps) -> train_step`` — the raw (unjitted)
-        step factory; normally ``lambda opt, k:
-        trainer.make_train_step(task, opt, accum_steps=k)``.
+        The raw (unjitted) step factory.  ``(optimizer, accum_steps)
+        -> train_step`` when ``config.data_max == 1`` (the legacy
+        K-only contract); ``(optimizer, accum_steps, mesh) ->
+        train_step`` when ``data_max > 1`` — ``mesh`` is ``None`` for
+        D=1 and a ("data","model") mesh for D>1 (pass it to
+        ``trainer.make_train_step(mesh=...)``).
     optimizer_factory:
         ``(global_batch: int) -> GradientTransform``.  Must scale the
         LR from the global batch (e.g. ``build_optimizer(...,
@@ -161,7 +242,17 @@ class AdaptiveBatchController:
     config:
         :class:`ControllerConfig`.
     init_batch:
-        starting global batch (default ``config.batch_min``).
+        starting global batch (default ``config.batch_min``);
+        ``init_data_parallel`` the starting D — default ``None``
+        applies the fill-data-first policy from step 0 (the widest
+        power-of-two D ≤ ``data_max`` that keeps ``init_batch``
+        exactly representable), so a stable B_noise inside the
+        deadband never leaves an available data axis idle; pass an
+        explicit D (``init_batch`` divisible by D·microbatch) to
+        override.
+    mesh_factory:
+        ``(d: int) -> Mesh`` for D ≥ 2 (default: first-d-devices
+        ("data","model") mesh).  Meshes are cached per D.
     lr_fn:
         ``() -> float`` reporting the LR for the *current* batch, used
         for the ``controller/lr`` metric; default is the stateful
@@ -172,11 +263,13 @@ class AdaptiveBatchController:
 
     name = "controller"
 
-    def __init__(self, make_step: Callable[[GradientTransform, int], Any],
+    def __init__(self, make_step: Callable[..., Any],
                  optimizer_factory: Callable[[int], GradientTransform],
                  noise_probe: Callable[[int, Any], dict],
                  config: ControllerConfig, *,
                  init_batch: Optional[int] = None,
+                 init_data_parallel: Optional[int] = None,
+                 mesh_factory: Optional[Callable[[int], Mesh]] = None,
                  base_lr: float = 1.0, base_batch_size: int = 256,
                  scaling_rule: str = "sqrt",
                  lr_fn: Optional[Callable[[], float]] = None,
@@ -187,26 +280,45 @@ class AdaptiveBatchController:
         self._optimizer_factory = optimizer_factory
         self.noise_probe = noise_probe
         self._donate = donate
+        self._mesh_factory = mesh_factory or _default_mesh_factory
         init_batch = config.batch_min if init_batch is None else init_batch
-        if init_batch % config.microbatch:
+        if init_data_parallel is None:
+            # fill-data-first from step 0: the widest power-of-two D
+            # that keeps init_batch exactly representable
+            init_data_parallel = 1
+            if init_batch % config.microbatch == 0:
+                f = init_batch // config.microbatch
+                while init_data_parallel * 2 <= config.data_max \
+                        and f % (init_data_parallel * 2) == 0:
+                    init_data_parallel *= 2
+        if init_data_parallel < 1 or \
+                init_data_parallel > config.data_max:
+            raise ValueError(
+                f"init_data_parallel={init_data_parallel} outside "
+                f"[1, data_max={config.data_max}]")
+        per_pull = init_data_parallel * config.microbatch
+        if init_batch % per_pull:
             raise ValueError(
                 f"init_batch={init_batch} must be a multiple of "
-                f"microbatch={config.microbatch}")
+                f"init_data_parallel*microbatch={per_pull}")
         if not config.batch_min <= init_batch <= config.batch_max:
             raise ValueError(
                 f"init_batch={init_batch} outside "
                 f"[{config.batch_min}, {config.batch_max}]")
-        self._global_batch = int(init_batch)
+        self._dp = int(init_data_parallel)
+        self._k = int(init_batch // per_pull)
         # the stateful LR path: re-reads the current batch on each call
         self._lr_fn = lr_fn if lr_fn is not None else \
             schedules.batch_scaled_lr(
                 base_lr, base_batch_size=base_batch_size,
                 rule=scaling_rule,
-                batch_size_fn=lambda: self._global_batch)
+                batch_size_fn=lambda: self.global_batch)
         self._b_ema: Optional[float] = None
         self._optimizers: dict[int, GradientTransform] = {}
-        self._raw_steps: dict[int, Any] = {}
-        self._jit_steps: dict[int, Any] = {}
+        self._meshes: dict[int, Optional[Mesh]] = {1: None}
+        self._raw_steps: dict[tuple[int, int], Any] = {}
+        self._jit_steps: dict[tuple[int, int], Any] = {}
+        self._run_steps: dict[tuple[int, int], Any] = {}
         self._streams: list = []
         self.compiles = 0
         self.switches = 0
@@ -214,11 +326,19 @@ class AdaptiveBatchController:
     # ------------------------------------------------------------ state
     @property
     def global_batch(self) -> int:
-        return self._global_batch
+        return self._dp * self._k * self.config.microbatch
 
     @property
     def accum_steps(self) -> int:
-        return self._global_batch // self.config.microbatch
+        return self._k
+
+    @property
+    def data_parallel(self) -> int:
+        return self._dp
+
+    @property
+    def targets(self) -> tuple[int, int]:
+        return self._dp, self._k
 
     @property
     def lr(self) -> float:
@@ -226,47 +346,97 @@ class AdaptiveBatchController:
 
     @property
     def visited_ks(self) -> tuple[int, ...]:
+        return tuple(sorted({k for _, k in self._raw_steps}))
+
+    @property
+    def visited_targets(self) -> tuple[tuple[int, int], ...]:
         return tuple(sorted(self._raw_steps))
+
+    def mesh_for(self, data_parallel: Optional[int] = None
+                 ) -> Optional[Mesh]:
+        """The (cached) mesh for a data width; ``None`` for D=1."""
+        d = self._dp if data_parallel is None else data_parallel
+        if d not in self._meshes:
+            self._meshes[d] = self._mesh_factory(d)
+        return self._meshes[d]
 
     def optimizer(self, global_batch: Optional[int] = None
                   ) -> GradientTransform:
         """The (cached) optimizer for ``global_batch`` — use
         ``controller.optimizer()`` to create the initial TrainState so
         step 0 already trains at the controller's starting batch."""
-        b = self._global_batch if global_batch is None else global_batch
+        b = self.global_batch if global_batch is None else global_batch
         if b not in self._optimizers:
             self._optimizers[b] = self._optimizer_factory(b)
         return self._optimizers[b]
 
-    def raw_step(self, accum_steps: Optional[int] = None):
-        """The unjitted step for K (cached) — what ``step_fn`` compiles
-        and what the 2-``pallas_call`` invariant tests introspect."""
-        k = self.accum_steps if accum_steps is None else accum_steps
-        if k not in self._raw_steps:
-            opt = self.optimizer(k * self.config.microbatch)
-            self._raw_steps[k] = self._make_step(opt, k)
-        return self._raw_steps[k]
+    def _key(self, accum_steps: Optional[int],
+             data_parallel: Optional[int]) -> tuple[int, int]:
+        return (self._dp if data_parallel is None else data_parallel,
+                self._k if accum_steps is None else accum_steps)
 
-    def step_fn(self, accum_steps: Optional[int] = None):
-        """The jitted step for the current K.  Cache-keyed by K:
-        building (and compiling) happens once per K actually visited;
-        revisiting a K is a dict lookup."""
-        k = self.accum_steps if accum_steps is None else accum_steps
-        if k not in self._jit_steps:
-            raw = self.raw_step(k)
-            self._jit_steps[k] = jax.jit(raw, donate_argnums=(0,)) \
-                if self._donate else jax.jit(raw)
-            self.compiles += 1
-        return self._jit_steps[k]
+    def raw_step(self, accum_steps: Optional[int] = None,
+                 data_parallel: Optional[int] = None):
+        """The unjitted step for (D, K) (cached) — what ``step_fn``
+        compiles and what the 2-``pallas_call`` invariant tests
+        introspect."""
+        d, k = self._key(accum_steps, data_parallel)
+        if (d, k) not in self._raw_steps:
+            opt = self.optimizer(d * k * self.config.microbatch)
+            if self.config.data_max > 1:
+                step = self._make_step(opt, k, self.mesh_for(d))
+            else:
+                step = self._make_step(opt, k)
+            self._raw_steps[(d, k)] = step
+        return self._raw_steps[(d, k)]
+
+    def step_fn(self, accum_steps: Optional[int] = None,
+                data_parallel: Optional[int] = None):
+        """The runnable step for the current (D, K).  Cache-keyed:
+        building (and compiling) happens once per pair actually
+        visited; revisiting a pair is a dict lookup.  For D > 1 the
+        returned callable also places the host batch onto the mesh
+        (``pipeline.shard_batch`` on the microbatch dim) before
+        invoking the jitted step."""
+        d, k = self._key(accum_steps, data_parallel)
+        if (d, k) in self._run_steps:
+            return self._run_steps[(d, k)]
+        raw = self.raw_step(k, d)
+        jitted = jax.jit(raw, donate_argnums=(0,)) if self._donate \
+            else jax.jit(raw)
+        self._jit_steps[(d, k)] = jitted
+        self.compiles += 1
+        if d == 1:
+            run = jitted
+        else:
+            mesh = self.mesh_for(d)
+            batch_dim = 1 if k > 1 else 0
+
+            def run(state, *batch_args, _j=jitted, _m=mesh,
+                    _bd=batch_dim):
+                placed = tuple(
+                    pipeline.shard_batch(_m, b, batch_dim=_bd)
+                    for b in batch_args)
+                return _j(state, *placed)
+        self._run_steps[(d, k)] = run
+        return run
 
     def attach(self, stream) -> None:
-        """Register a stream to retarget on K switches (anything with
-        ``set_accum_steps``); ``fit(controller=...)`` calls this on its
+        """Register a stream to retarget on (D, K) switches (anything
+        with ``set_accum_steps``, plus ``set_data_parallel`` when
+        ``data_max > 1``); ``fit(controller=...)`` calls this on its
         batch iterable automatically."""
         if not hasattr(stream, "set_accum_steps"):
             raise TypeError(
                 f"controller stream must expose set_accum_steps(k) "
                 f"(e.g. data.pipeline.MicrobatchedStream); got "
+                f"{type(stream).__name__}")
+        if self.config.data_max > 1 and \
+                not hasattr(stream, "set_data_parallel"):
+            raise TypeError(
+                f"data_max={self.config.data_max} > 1 needs a stream "
+                f"with set_data_parallel(d) (e.g. "
+                f"data.pipeline.MicrobatchedStream); got "
                 f"{type(stream).__name__}")
         if stream.microbatch != self.config.microbatch:
             raise ValueError(
@@ -274,29 +444,42 @@ class AdaptiveBatchController:
                 f"microbatch {self.config.microbatch}")
         if stream not in self._streams:
             self._streams.append(stream)
-        stream.set_accum_steps(self.accum_steps)
+        self._sync_stream(stream)
+
+    def _sync_stream(self, stream) -> None:
+        stream.set_accum_steps(self._k)
+        if hasattr(stream, "set_data_parallel"):
+            stream.set_data_parallel(self._dp)
 
     # -------------------------------------------------------- decisions
-    def retarget(self, global_batch: int) -> bool:
+    def retarget(self, global_batch: int,
+                 data_parallel: Optional[int] = None) -> bool:
         """Set the global batch directly (the decision's apply path;
-        also useful for scripted schedules).  Returns True if the batch
-        changed.  Takes effect at the next ``next(stream)`` /
-        ``step_fn()`` — the re-stack boundary between jitted segments."""
+        also useful for scripted schedules).  ``data_parallel=None``
+        keeps the current D (the legacy K-only semantics).  Returns
+        True if (D, K) changed.  Takes effect at the next
+        ``next(stream)`` / ``step_fn()`` — the re-stack boundary
+        between jitted segments."""
         cfg = self.config
-        if global_batch % cfg.microbatch:
+        d = self._dp if data_parallel is None else int(data_parallel)
+        if d < 1 or d > cfg.data_max:
+            raise ValueError(
+                f"data_parallel={d} outside [1, data_max={cfg.data_max}]")
+        if global_batch % (d * cfg.microbatch):
             raise ValueError(
                 f"global_batch={global_batch} not a multiple of "
-                f"microbatch={cfg.microbatch}")
+                f"data_parallel*microbatch={d * cfg.microbatch}")
         if not cfg.batch_min <= global_batch <= cfg.batch_max:
             raise ValueError(
                 f"global_batch={global_batch} outside "
                 f"[{cfg.batch_min}, {cfg.batch_max}]")
-        if global_batch == self._global_batch:
+        k = global_batch // (d * cfg.microbatch)
+        if (d, k) == (self._dp, self._k):
             return False
-        self._global_batch = int(global_batch)
+        self._dp, self._k = d, k
         self.switches += 1
         for stream in self._streams:
-            stream.set_accum_steps(self.accum_steps)
+            self._sync_stream(stream)
         return True
 
     def __call__(self, step: int, state) -> dict[str, float]:
@@ -313,15 +496,19 @@ class AdaptiveBatchController:
                 self.config.ema * self._b_ema \
                 + (1.0 - self.config.ema) * measured
         smoothed = self._b_ema if self._b_ema is not None else measured
-        if valid:
-            target = decide_global_batch(smoothed, self._global_batch,
-                                         self.config)
+        decided = decide_targets(smoothed, self.global_batch,
+                                 self.config) if valid else None
+        if decided is None:
+            cached = (self._dp, self._k) in self._jit_steps
+            changed = False
         else:
-            target = self._global_batch
-        cached = target // self.config.microbatch in self._jit_steps
-        changed = self.retarget(target)
+            d, k = decided
+            cached = (d, k) in self._jit_steps
+            changed = self.retarget(d * k * self.config.microbatch,
+                                    data_parallel=d)
         return {"b_noise": measured, "b_noise_ema": smoothed,
-                "global_batch": float(self._global_batch),
-                "accum_steps": float(self.accum_steps),
+                "global_batch": float(self.global_batch),
+                "accum_steps": float(self._k),
+                "data_parallel": float(self._dp),
                 "lr": self.lr, "changed": float(changed),
                 "step_cached": float(cached)}

@@ -19,6 +19,14 @@ these are not linear in per-sample terms, so under accumulation the
 large-batch definition; parity with a single B-sized pass holds exactly
 when microbatches share routing/correlation statistics (e.g. the tiled
 batches used in the parity tests) and approximately otherwise.
+
+The same contract is what makes the mean-reduced loss *data-parallel
+shardable*: under ``make_train_step(mesh=...)`` each device evaluates
+``loss_fn`` on its shard of the microbatch and the psum-average of the
+per-shard means IS the global-batch mean for per-sample-decomposable
+losses (LM CE, classification), while batch-statistics losses inherit
+exactly the accumulation caveat above with shards in place of
+microbatches.
 """
 from __future__ import annotations
 

@@ -5,6 +5,12 @@ was built with ``use_kernel="fused"``, ``opt_state`` holds flat
 ``(rows, 128)`` substrate buffers (see ``repro.core.flatten``) instead
 of per-leaf momentum trees — still ordinary pytree leaves, so jit/pjit,
 donation and checkpointing are unaffected.
+
+The mesh-native data-parallel train step
+(``trainer.make_train_step(mesh=...)``) requires the whole state
+replicated over the mesh's data axes — :func:`replicate` is the one
+helper that places it (params, flat substrate buffers and the step
+counter alike get ``PartitionSpec()``).
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.base import GradientTransform
 
@@ -25,6 +32,14 @@ class TrainState(NamedTuple):
     def create(cls, params, optimizer: GradientTransform) -> "TrainState":
         return cls(step=jnp.zeros((), jnp.int32), params=params,
                    opt_state=optimizer.init(params))
+
+
+def replicate(tree: Any, mesh: Mesh) -> Any:
+    """Device-put every leaf fully replicated over ``mesh`` — the state
+    layout the shard_map data-parallel step expects (the fused flat
+    ``(rows, 128)`` substrate stays whole on every device, so the
+    2-``pallas_call`` step invariant is per-device, not per-shard)."""
+    return jax.device_put(tree, NamedSharding(mesh, PartitionSpec()))
 
 
 def param_count(state: TrainState) -> int:

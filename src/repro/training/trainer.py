@@ -5,6 +5,19 @@ function ``(state, batch) -> (state, metrics)`` used everywhere: jit'd
 directly for CPU experiments, or pjit'd with shardings by the launcher —
 the function body is identical (GSPMD handles distribution).
 
+``make_train_step(..., mesh=mesh)`` is the mesh-native data-parallel
+path: the task loss + accumulation scan run under ``shard_map`` over
+the mesh's data axes (batch leaves sharded on the microbatch dim — the
+``pipeline.microbatch_pspec`` layout), per-device mean gradients are
+``psum``-averaged in f32 across the data axis, and everything
+downstream of the all-reduce — the optimizer application, grad_norm,
+and the LWN/LGN/LNR traces — sees the replicated GLOBAL-batch
+gradients. The fused optimizer therefore still runs exactly two
+``pallas_call``s per device per global step, on the replicated flat
+``(rows, 128)`` substrate, at any (data_parallel, accum_steps): the
+global batch is ``K × D × microbatch`` and scaling D moves samples
+onto more devices instead of more scan steps.
+
 ``task`` is a :class:`repro.training.tasks.Task` (LM / classifier / SSL
 all share one step body); passing a :class:`repro.models.registry.Model`
 is accepted as shorthand for ``tasks.lm_task(model)``.
@@ -29,9 +42,12 @@ from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import apply_updates, instrumentation
 from repro.core.base import GradientTransform
+from repro.data import pipeline
 from repro.diagnostics import hvp as hvp_lib
 from repro.diagnostics import probes as probes_lib
 from repro.diagnostics import sink as sinks
@@ -84,9 +100,55 @@ def _accumulate(grad_fn: Callable, params, batch, accum_steps: int):
     return loss_acc.result(), metrics, grads
 
 
+def _check_divisible(batch, accum_steps: int, dp: int, axes) -> None:
+    """Trace-time guard: every microbatch dim must split over the data
+    axes. Raises naming the offending sizes (shapes are static)."""
+    dim = 1 if accum_steps > 1 else 0
+    for leaf in jax.tree_util.tree_leaves(batch):
+        if leaf.ndim <= dim or leaf.shape[dim] % dp:
+            raise ValueError(
+                f"mesh train step: batch leaf {leaf.shape} has "
+                f"microbatch dim {dim} of size "
+                f"{leaf.shape[dim] if leaf.ndim > dim else '<missing>'} "
+                f"which does not split over the data-parallel width "
+                f"{dp} (axes {axes}); global batch must be "
+                f"K x D x per-device-microbatch")
+
+
+def _sharded_grad_fn(task, mesh: Mesh, axes, accum_steps: int):
+    """``(params, batch) -> (loss, metrics, grads)`` under ``shard_map``
+    over the data axes: per-shard loss/grads (with the K-scan inside),
+    then one f32 ``pmean`` — the all-reduce that makes every device see
+    the global-batch mean. Params are replicated (in_spec ``P()``);
+    outputs are replicated, so the caller's optimizer/telemetry code is
+    identical to the single-device path."""
+    grad_fn = jax.value_and_grad(task.loss_fn, has_aux=True)
+
+    def local(params, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        else:
+            loss, metrics, grads = _accumulate(
+                grad_fn, params, batch, accum_steps)
+
+        def pm(x):
+            return jax.lax.pmean(jnp.asarray(x, jnp.float32), axes)
+
+        return (pm(loss), jax.tree_util.tree_map(pm, metrics),
+                jax.tree_util.tree_map(pm, grads))
+
+    bspec = pipeline.batch_axes_pspec(axes, accum_steps)
+    return shard_map(local, mesh=mesh, in_specs=(P(), bspec),
+                     out_specs=P(), check_rep=False)
+
+
 def make_train_step(task: Union[tasks.Task, Model],
                     optimizer: GradientTransform, *,
                     accum_steps: int = 1,
+                    mesh: Optional[Mesh] = None,
+                    data_axes: Optional[tuple] = None,
                     lb_coef: float = 1e-2, z_coef: float = 1e-3,
                     record_norms: bool = False) -> Callable:
     """The one step factory: ``(state, batch) -> (state, metrics)``.
@@ -97,6 +159,16 @@ def make_train_step(task: Union[tasks.Task, Model],
     ``accum_steps=K>1``: batch leaves are ``[K, B/K, ...]`` stacked
     microbatches; grads/metrics accumulate in f32 over a scan and the
     optimizer applies once per global step.
+    ``mesh=``: run the loss + accumulation under ``shard_map`` over the
+    mesh's data axes (default ``data_axes``: the ``("pod", "data")``
+    subset present in the mesh). The microbatch dim of every batch leaf
+    is sharded over those axes (``pipeline.shard_batch`` /
+    ``microbatch_pspec`` layout); params and optimizer state must be
+    replicated over them. Gradients are psum-averaged in f32 inside the
+    region, so grad_norm / LWN / LGN / LNR and the optimizer all see
+    the global-batch gradients, and the fused path keeps its exact
+    2-``pallas_call``-per-device invariant. A mesh whose data width is
+    1 falls back to the identical single-device body.
 
     The returned step also accepts the batch splatted as positional args
     (``step(state, images, labels)``), matching the legacy per-workload
@@ -108,9 +180,19 @@ def make_train_step(task: Union[tasks.Task, Model],
         raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
     grad_fn = jax.value_and_grad(task.loss_fn, has_aux=True)
 
+    dp = pipeline.resolve_dp_size(mesh, data_axes)
+    if dp > 1:
+        data_axes = pipeline.resolve_data_axes(mesh, data_axes)
+        sharded = _sharded_grad_fn(task, mesh, data_axes, accum_steps)
+    else:
+        sharded = None
+
     def train_step(state: TrainState, *batch_args):
         batch = batch_args[0] if len(batch_args) == 1 else batch_args
-        if accum_steps == 1:
+        if sharded is not None:
+            _check_divisible(batch, accum_steps, dp, data_axes)
+            loss, task_metrics, grads = sharded(state.params, batch)
+        elif accum_steps == 1:
             (loss, task_metrics), grads = grad_fn(state.params, batch)
         else:
             loss, task_metrics, grads = _accumulate(
@@ -137,21 +219,23 @@ def make_train_step(task: Union[tasks.Task, Model],
 def make_classifier_step(apply_fn: Callable,
                          optimizer: GradientTransform, *,
                          accum_steps: int = 1,
+                         mesh: Optional[Mesh] = None,
                          record_norms: bool = False) -> Callable:
     """Back-compat shim: ``make_train_step(tasks.classifier_task(...))``."""
     return make_train_step(tasks.classifier_task(apply_fn), optimizer,
-                           accum_steps=accum_steps,
+                           accum_steps=accum_steps, mesh=mesh,
                            record_norms=record_norms)
 
 
 def make_ssl_step(embed_fn: Callable, optimizer: GradientTransform, *,
                   lambda_offdiag: float = 5e-3,
                   accum_steps: int = 1,
+                  mesh: Optional[Mesh] = None,
                   record_norms: bool = False) -> Callable:
     """Back-compat shim: ``make_train_step(tasks.ssl_task(...))``."""
     return make_train_step(
         tasks.ssl_task(embed_fn, lambda_offdiag=lambda_offdiag), optimizer,
-        accum_steps=accum_steps, record_norms=record_norms)
+        accum_steps=accum_steps, mesh=mesh, record_norms=record_norms)
 
 
 def fit(train_step: Optional[Callable], state: TrainState, batches,

@@ -141,6 +141,70 @@ print("SHARDED_DECODE_MATCHES")
 """
 
 
+SHMAP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.models import layers as layers_lib
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+from repro.core import build_optimizer
+from repro.data import pipeline
+from repro.data.synthetic import ClassificationData, lm_batch
+from repro.kernels.ops import count_pallas_calls
+from repro.launch.mesh import make_data_mesh
+from repro.training import tasks
+from repro.training.train_state import TrainState, replicate
+from repro.training.trainer import make_train_step
+
+assert len(jax.devices()) == 8
+layers_lib.set_batch_sharding(None)
+opt = build_optimizer("tvlars", total_steps=10, learning_rate=1.0,
+                      use_kernel="fused")
+
+def check(task, state, batch, accum_steps, dp):
+    if accum_steps > 1:
+        batch = pipeline.stack_microbatches(batch, accum_steps)
+    ref_state, ref_m = jax.jit(make_train_step(
+        task, opt, accum_steps=accum_steps))(state, batch)
+    mesh = make_data_mesh(dp)
+    step = make_train_step(task, opt, accum_steps=accum_steps, mesh=mesh)
+    placed = pipeline.shard_batch(
+        mesh, batch, batch_dim=1 if accum_steps > 1 else 0)
+    new_state, m = jax.jit(step)(replicate(state, mesh), placed)
+    for a, b in zip(jax.tree_util.tree_leaves(ref_state),
+                    jax.tree_util.tree_leaves(new_state)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(jax.device_get(b)), atol=1e-6)
+    np.testing.assert_allclose(float(ref_m["loss"]), float(m["loss"]),
+                               atol=1e-6)
+    jaxpr = jax.make_jaxpr(step)(state, batch)
+    assert count_pallas_calls(jaxpr.jaxpr) == 2, "2-launch invariant"
+
+# classifier, K=2 D=4
+DATA = ClassificationData(num_classes=8, image_size=8, seed=0)
+params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                             num_classes=8, hidden=32)
+task = tasks.classifier_task(apply_mlp_classifier)
+check(task, TrainState.create(params, opt),
+      DATA.batch(jax.random.PRNGKey(1), 16), 2, 4)
+
+# dense LM, K=1 D=2
+cfg = ModelConfig(family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=128, remat=False)
+m = get_model(cfg)
+toks, labels = lm_batch(jax.random.PRNGKey(1), 8, 32, cfg.vocab_size)
+check(tasks.lm_task(m), TrainState.create(m.init(jax.random.PRNGKey(0)),
+                                          opt),
+      {"tokens": toks, "labels": labels}, 1, 2)
+print("SHARD_MAP_STEP_MATCHES")
+"""
+
+
 def _run(script: str) -> str:
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
@@ -159,6 +223,16 @@ def test_sharded_train_step_matches_single_device():
 @pytest.mark.slow
 def test_sharded_decode_matches_single_device():
     assert "SHARDED_DECODE_MATCHES" in _run(DECODE_SCRIPT)
+
+
+@pytest.mark.slow
+def test_shard_map_train_step_matches_single_device():
+    """The mesh-native shard_map step (params replicated, grads psum'd,
+    fused optimizer outside the region) ≡ single device ≤ 1e-6, with
+    the 2-pallas_call invariant intact — subprocess twin of the
+    in-process grid in test_mesh_train.py, so tier-1 covers it without
+    the multidevice env flag."""
+    assert "SHARD_MAP_STEP_MATCHES" in _run(SHMAP_SCRIPT)
 
 
 def test_pspec_rules_divisibility_guard():

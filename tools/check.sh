@@ -1,5 +1,5 @@
 #!/usr/bin/env sh
-# One-shot verification — the same four tiers CI runs as separate named
+# One-shot verification — the same tiers CI runs as separate named
 # steps (.github/workflows/ci.yml), plus lint and the JSONL metrics
 # contract guard:
 #   1. tier-1 suite on the default (Pallas interpret) dispatch
@@ -8,6 +8,11 @@
 #   3. CPU end-to-end launcher smoke with gradient accumulation (K=4),
 #      streaming metrics to experiments/bench/smoke_launcher.jsonl
 #   4. diagnostics probe smoke (tiny MLP, 2 Lanczos iters, JSONL schema)
+#   5. multidevice: mesh-native numerics on 8 fabricated CPU devices
+#      (shard_map train-step parity, DP controller (D,K) retargeting,
+#      cross-mesh checkpoint round-trips; the GSPMD-parity subprocess
+#      tests already ran in tier 1) + a mesh-native launcher smoke
+#      (D=2 shard_map step)
 # then ruff lint (skipped with a notice when ruff is not installed) and
 # tools/validate_metrics.py over the smoke traces, so MetricsSink schema
 # drift fails here and in CI, not in a downstream notebook.
@@ -34,6 +39,15 @@ python -m repro.launch.train --smoke --steps 2 --seq 64 \
 echo "== diagnostics probe smoke (tiny MLP, 2 Lanczos iters, JSONL schema) =="
 python -m repro.diagnostics.smoke --out experiments/bench
 
+echo "== multidevice (8 fabricated CPU devices: shard_map parity, DP controller, sharded ckpts; GSPMD parity ran in tier 1) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -q tests/test_mesh_train.py
+
+echo "== mesh-native launcher smoke (D=2, K=2, shard_map step) =="
+python -m repro.launch.train --smoke --steps 2 --seq 64 \
+    --global-batch 8 --microbatch 2 --mesh-data 2 --log-every 1 \
+    --metrics-out experiments/bench/smoke_mesh_launcher.jsonl
+
 echo "== lint (ruff) =="
 if command -v ruff >/dev/null 2>&1; then
     ruff check .
@@ -44,6 +58,7 @@ fi
 echo "== JSONL metrics contract (tools/validate_metrics.py) =="
 python tools/validate_metrics.py \
     experiments/bench/smoke_launcher.jsonl \
+    experiments/bench/smoke_mesh_launcher.jsonl \
     experiments/bench/probe_smoke.jsonl
 
 echo "check: OK"
