@@ -12,25 +12,42 @@ that launch collapse is the whole point of the flat substrate
 Sections:
   * per-tensor fused LARS vs jitted reference (traffic model + fusions)
   * optimizer-step dispatch sweep over model-registry param trees:
-    pure-jnp vs ``use_kernel="per_tensor"`` vs ``use_kernel="fused"``,
-    reporting us/step, pallas_call counts, and substrate state bytes.
+    pure-jnp vs ``use_kernel="per_tensor"`` vs ``use_kernel="fused"``
+    under each precision policy (f32 / bf16_master), reporting us/step,
+    pallas_call counts, resident substrate state bytes and the modeled
+    per-step HBM traffic (``segmented_update.modeled_hbm_bytes``) —
+    plus a ``state_traffic_ratio`` summary row per (tree, optimizer)
+    evidencing the bf16 policy's >=1.8x optimizer-state-bytes win at an
+    unchanged 2-``pallas_call`` count.
+
+Every ``record()``ed row is also flushed to
+``experiments/bench/BENCH_kernels.json`` (``--json-name`` to rename,
+``--quick`` for a reduced CI-friendly sweep) so future PRs can regress
+against the trajectory machine-readably.
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, peak_temp_bytes, time_fn
+from benchmarks.common import peak_temp_bytes, record, time_fn, write_json
 from repro.configs.base import ModelConfig
 from repro.core import apply_updates, build_optimizer
+from repro.core.layerwise import storage_dtype
 from repro.data.pipeline import stack_microbatches
 from repro.data.synthetic import lm_batch
 from repro.kernels import ref
 from repro.kernels.ops import count_pallas_calls
+from repro.kernels.segmented_update import modeled_hbm_bytes
 from repro.models import get_model
 from repro.training.train_state import TrainState, opt_buffer_bytes
 from repro.training.trainer import make_train_step
+
+# build_optimizer name -> segmented-kernel mode (for the traffic model)
+_MODES = {"wa-lars": "lars", "tvlars": "paper", "lamb": "lamb"}
 
 
 def _param_trees() -> dict:
@@ -48,9 +65,12 @@ def _param_trees() -> dict:
     return trees
 
 
-def bench_optimizer_dispatch() -> None:
+def bench_optimizer_dispatch(quick: bool = False) -> None:
     rng = np.random.default_rng(0)
-    for tree_name, params in _param_trees().items():
+    trees = _param_trees()
+    if quick:
+        trees = {"dense-2l": trees["dense-2l"]}
+    for tree_name, params in trees.items():
         grads = jax.tree_util.tree_map(
             lambda p: jnp.asarray(rng.normal(size=p.shape), p.dtype),
             params)
@@ -58,12 +78,17 @@ def bench_optimizer_dispatch() -> None:
         n_leaves = len(leaves)
         n_adapt = sum(1 for p in leaves if p.ndim >= 2)
         for opt_name in ("wa-lars", "tvlars", "lamb"):
-            for uk, label in ((False, "jnp"), ("per_tensor", "per_tensor"),
-                              ("fused", "fused")):
+            per_precision = {}   # precision -> modeled state bytes/step
+            for uk, prec, label in (
+                    (False, "f32", "jnp"),
+                    ("per_tensor", "f32", "per_tensor"),
+                    ("fused", "f32", "fused"),
+                    ("fused", "bf16_master", "fused_bf16_master")):
                 if opt_name != "wa-lars" and uk == "per_tensor":
                     continue   # per-tensor kernel is heavy-ball LARS only
                 opt = build_optimizer(opt_name, total_steps=100,
-                                      learning_rate=0.2, use_kernel=uk)
+                                      learning_rate=0.2, use_kernel=uk,
+                                      precision=prec)
                 state = TrainState.create(params, opt)
 
                 def step(g, s):
@@ -74,14 +99,36 @@ def bench_optimizer_dispatch() -> None:
                 n_pallas = count_pallas_calls(
                     jax.make_jaxpr(step)(grads, state).jaxpr)
                 us = time_fn(jax.jit(step), grads, state)
-                emit(f"kernels/opt_step/{tree_name}/{opt_name}/{label}",
-                     us,
-                     f"pallas_calls={n_pallas} leaves={n_leaves} "
-                     f"adapt={n_adapt} "
-                     f"opt_state_bytes={opt_buffer_bytes(state)}")
+                fields = dict(pallas_calls=n_pallas, leaves=n_leaves,
+                              adapt=n_adapt, precision=prec,
+                              opt_state_bytes=opt_buffer_bytes(state))
+                if uk == "fused":
+                    # substrate rows from the first flat state buffer
+                    rows = jax.tree_util.tree_leaves(
+                        state.opt_state)[1].shape[0]
+                    hbm = modeled_hbm_bytes(
+                        _MODES[opt_name], rows,
+                        itemsize=jnp.dtype(storage_dtype(prec)).itemsize)
+                    fields.update(substrate_rows=rows,
+                                  hbm_state_bytes=hbm["state"],
+                                  hbm_total_bytes=hbm["total"])
+                    per_precision[prec] = (hbm, n_pallas)
+                record(f"kernels/opt_step/{tree_name}/{opt_name}/{label}",
+                       us, **fields)
+            if len(per_precision) == 2:
+                f32, bf16 = per_precision["f32"], \
+                    per_precision["bf16_master"]
+                record(
+                    f"kernels/opt_step/{tree_name}/{opt_name}/"
+                    f"state_traffic_ratio", 0.0,
+                    state_traffic_ratio=round(
+                        f32[0]["state"] / bf16[0]["state"], 3),
+                    total_traffic_ratio=round(
+                        f32[0]["total"] / bf16[0]["total"], 3),
+                    pallas_calls_f32=f32[1], pallas_calls_bf16=bf16[1])
 
 
-def bench_accumulation() -> None:
+def bench_accumulation(quick: bool = False) -> None:
     """Gradient-accumulation sweep: global batch = K × fixed microbatch.
 
     The claim under test: with the accumulating step a global batch ≥8×
@@ -98,7 +145,7 @@ def bench_accumulation() -> None:
                           use_kernel="fused")
     state = TrainState.create(model.init(jax.random.PRNGKey(0)), opt)
     key = jax.random.PRNGKey(1)
-    for k in (1, 4, 8, 16):
+    for k in (1, 4) if quick else (1, 4, 8, 16):
         g = micro * k
         toks, labels = lm_batch(key, g, seq, cfg.vocab_size)
         batch = {"tokens": toks, "labels": labels}
@@ -115,12 +162,20 @@ def bench_accumulation() -> None:
         stats = compiled.memory_analysis()
         peak = int(stats.temp_size_in_bytes) if stats is not None else -1
         us = time_fn(compiled, state, stacked)
-        emit(f"kernels/accum_step/global{g}_micro{micro}_k{k}", us,
-             f"pallas_calls={n_pallas} peak_temp_bytes={peak} "
-             f"naive_peak_temp_bytes={naive_peak}")
+        record(f"kernels/accum_step/global{g}_micro{micro}_k{k}", us,
+               pallas_calls=n_pallas, peak_temp_bytes=peak,
+               naive_peak_temp_bytes=naive_peak)
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep (one tree, short accumulation "
+                         "ladder) for CI")
+    ap.add_argument("--json-name", default="BENCH_kernels",
+                    help="basename of the JSON written to "
+                         "experiments/bench/")
+    args = ap.parse_args()
     rng = np.random.default_rng(0)
     shape = (1024, 512)
     w = jnp.asarray(rng.normal(size=shape), jnp.float32)
@@ -131,22 +186,27 @@ def main() -> None:
     fused_ref = jax.jit(lambda w, g, m: ref.ref_lars_update(w, g, m, **kw))
     us = time_fn(fused_ref, w, g, m)
     nbytes = w.size * 4 * 5
-    emit("kernels/lars_update_ref_jit", us,
-         f"traffic_model={nbytes/1e6:.1f}MB/5-passes")
+    record("kernels/lars_update_ref_jit", us,
+           traffic_model=f"{nbytes/1e6:.1f}MB/5-passes")
 
     # HLO pass-count evidence for the fusion claim
     txt = fused_ref.lower(w, g, m).compile().as_text()
     n_fusion = txt.count(" fusion(")
-    emit("kernels/lars_update_ref_fusions", 0.0, f"xla_fusions={n_fusion}")
+    record("kernels/lars_update_ref_fusions", 0.0, xla_fusions=n_fusion)
 
     x = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)
     s = jnp.zeros((1024,))
     rms_ref = jax.jit(lambda x, s: ref.ref_rmsnorm(x, s))
-    emit("kernels/rmsnorm_ref_jit", time_fn(rms_ref, x, s),
-         f"traffic_model={(x.size*4*2)/1e6:.1f}MB/2-passes")
+    record("kernels/rmsnorm_ref_jit", time_fn(rms_ref, x, s),
+           traffic_model=f"{(x.size*4*2)/1e6:.1f}MB/2-passes")
 
-    bench_optimizer_dispatch()
-    bench_accumulation()
+    bench_optimizer_dispatch(quick=args.quick)
+    bench_accumulation(quick=args.quick)
+    path = write_json(args.json_name,
+                      extra={"backend": jax.default_backend(),
+                             "interpret_mode":
+                                 jax.default_backend() == "cpu"})
+    print(f"json -> {path}")
 
 
 if __name__ == "__main__":

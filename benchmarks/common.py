@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import csv
+import json
 import os
 import time
 from typing import Callable, Iterable
@@ -39,6 +40,34 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """The required ``name,us_per_call,derived`` CSV line to stdout."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# entries accumulated by record(); write_json() flushes them to
+# experiments/bench/<name>.json for machine-readable trajectories
+_JSON_ENTRIES: list[dict] = []
+
+
+def record(name: str, us_per_call: float, **fields) -> None:
+    """emit() the human CSV line AND accumulate a JSON entry.
+
+    ``fields`` become both the derived ``k=v`` tail of the CSV line and
+    typed keys of the JSON entry, so the two views never drift."""
+    emit(name, us_per_call,
+         " ".join(f"{k}={v}" for k, v in fields.items()))
+    _JSON_ENTRIES.append({"name": name,
+                          "us_per_call": round(us_per_call, 1), **fields})
+
+
+def write_json(name: str, *, extra: dict | None = None) -> str:
+    """Flush record()ed entries to ``experiments/bench/<name>.json``."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    doc = {"schema": f"{name}/v1", **(extra or {}),
+           "entries": list(_JSON_ENTRIES)}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def peak_temp_bytes(fn: Callable, *args) -> int:

@@ -16,6 +16,13 @@ placements; incompatible placements (a PartitionSpec that does not
 divide the leaf's shape) raise a ValueError naming the leaf, shape and
 spec *before* any device transfer — the same fail-early contract as
 the shape/dtype/byte validation below.
+
+Mixed-precision states round-trip losslessly: bf16 substrate buffers
+are byte-viewed into the npz payload (npz cannot hold ml_dtypes) and
+restored bit-exactly, while the f32 master params are ordinary f32
+leaves — so a ``precision="bf16_master"`` state saved on one mesh and
+restored onto another (or onto a single device) is bitwise identical,
+and the next optimizer step matches the uninterrupted run.
 """
 from __future__ import annotations
 

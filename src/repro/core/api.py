@@ -25,6 +25,13 @@ only), ``"fused"`` (alias ``True``) = the flat substrate — the whole
 tree updated by exactly two segmented Pallas calls per step, covering
 LARS (nesterov, trust_clip), both TVLARS momentum styles, and LAMB.
 Unsupported flag combinations raise at build time.
+
+``precision`` selects the fused substrate's mixed-precision policy:
+``"f32"`` (default, bitwise-legacy), ``"bf16_master"`` (bf16 working
+params / grads / momentum with strictly-f32 norm accumulation and f32
+master updates — half the optimizer-state bytes per step), or
+``"bf16_master_sr"`` (plus stochastic rounding on the bf16 state
+write-back). Non-f32 policies require ``use_kernel="fused"``.
 """
 from __future__ import annotations
 
@@ -55,6 +62,7 @@ def build_optimizer(name: str, *, total_steps: int,
                     momentum: float = 0.9,
                     weight_decay: float = 5e-4,
                     use_kernel=False,   # False | "per_tensor" | "fused"/True
+                    precision: str = "f32",
                     momentum_style: str = "paper",
                     scaling_rule: str = "sqrt",
                     ) -> GradientTransform:
@@ -81,33 +89,39 @@ def build_optimizer(name: str, *, total_steps: int,
     if name in ("wa-lars", "lars"):
         sched = schedules.warmup_cosine(lr, warmup_steps, total_steps)
         return lars(sched, eta=eta, momentum=momentum,
-                    weight_decay=weight_decay, use_kernel=use_kernel)
+                    weight_decay=weight_decay, use_kernel=use_kernel,
+                    precision=precision)
     if name == "lambc-lars":
         # trust-ratio-clipped LARS WITHOUT warm-up (Fong et al. 2020):
         # the clip replaces warm-up's job of bounding the early LNR.
         sched = schedules.polynomial(lr, total_steps)
         return lars(sched, eta=eta, momentum=momentum,
                     weight_decay=weight_decay, trust_clip=10.0,
-                    use_kernel=use_kernel)
+                    use_kernel=use_kernel, precision=precision)
     if name == "nowa-lars":
         sched = schedules.polynomial(lr, total_steps)
         return lars(sched, eta=eta, momentum=momentum,
-                    weight_decay=weight_decay, use_kernel=use_kernel)
+                    weight_decay=weight_decay, use_kernel=use_kernel,
+                    precision=precision)
     if name == "lamb":
         sched = schedules.warmup_cosine(lr, warmup_steps, total_steps)
         return lamb(sched, weight_decay=weight_decay,
-                    use_kernel=use_kernel)
+                    use_kernel=use_kernel, precision=precision)
     if name == "tvlars":
         return tvlars(lr, lam=lam, delay_steps=delay_steps, alpha=alpha,
                       gamma_min=gamma_min, eta=eta, momentum=momentum,
                       weight_decay=weight_decay,
-                      momentum_style=momentum_style, use_kernel=use_kernel)
+                      momentum_style=momentum_style, use_kernel=use_kernel,
+                      precision=precision)
     if name == "sgd":
         if normalize_use_kernel(use_kernel):
             raise ValueError(
                 "sgd has no layer-wise kernel path; use_kernel must be "
                 "False (the trust-ratio kernels only apply to "
                 "lars/tvlars/lamb)")
+        if precision != "f32":
+            raise ValueError(
+                "sgd has no fused substrate; precision must be 'f32'")
         sched = schedules.warmup_cosine(lr, warmup_steps, total_steps)
         return sgd(sched, momentum=momentum, weight_decay=weight_decay)
     raise AssertionError(name)

@@ -3,21 +3,37 @@
 The layer-wise optimizers (LARS Eq. 2, TVLARS Eq. 5, LAMB) are per-tensor
 streaming workloads; launching two Pallas kernels *per leaf* makes a
 hundreds-of-tensors model launch-bound. This module packs every leaf of a
-parameter pytree into ONE lane-padded f32 buffer of shape
+parameter pytree into ONE lane-padded buffer of shape
 ``(num_rows, LANES)`` so the whole optimizer step becomes two segmented
 ``pallas_call``s (see ``repro.kernels.segmented_update``), regardless of
 how many tensors the model has.
 
+Dtype is a first-class axis of the substrate: ``build_spec(...,
+dtype=)`` selects the STORAGE dtype of the packed buffers (f32, or bf16
+for the mixed-precision ``"bf16_master"`` policy — working params /
+grads / momentum read and written at half the HBM bytes, while the
+kernels upcast every tile to f32 in VMEM, accumulate segment norms and
+the trust-ratio table strictly in f32, and emit the weight-update delta
+in f32 so the caller's f32 master params never see storage rounding;
+see ``repro.core.layerwise``).
+
 Layout: each leaf ("segment") is flattened, zero-padded up to a whole
 number of 128-lane rows, and placed at a static row offset — so every
 row of the flat buffer belongs to exactly one segment. Zero padding is
-exact for the segmented norms (adds 0 to Σx²) and inert for the
-elementwise apply (padded rows of every state buffer stay identically 0
-and are sliced off by :func:`unpack`).
+exact for the segmented norms AT ANY DTYPE (0 is exactly representable
+in bf16/f32 and adds 0 to Σx²) and inert for the elementwise apply
+(padded rows of every state buffer stay identically 0 and are sliced
+off by :func:`unpack`).
+
+Tile sizing is dtype-aware: the grid tile height is computed from a
+fixed per-operand byte budget (``BLOCK_BYTES``, 256 KiB — a (512, 128)
+f32 tile), so bf16 buffers pack twice the rows per tile instead of
+silently halving kernel occupancy; see :func:`max_block_rows`.
 
 All metadata is static Python computed once per (treedef, shapes,
-labels) and cached — inside ``jit`` it folds into the trace, so packing
-lowers to a single fused gather/concat and no per-step host work.
+labels, dtype) and cached — inside ``jit`` it folds into the trace, so
+packing lowers to a single fused gather/concat and no per-step host
+work.
 """
 from __future__ import annotations
 
@@ -34,7 +50,27 @@ from repro.core import labels as labels_lib
 PyTree = Any
 
 LANES = 128          # TPU lane dimension — last dim of the flat buffer
-MAX_BLOCK_ROWS = 512  # (512, 128) f32 tile = 256 KiB per operand
+BLOCK_BYTES = 512 * LANES * 4   # per-operand tile budget: 256 KiB
+MAX_BLOCK_ROWS = 512  # f32 rows under BLOCK_BYTES (back-compat constant)
+
+# minimum sublane tile height per storage dtype (TPU tiling: f32 packs
+# (8, 128) tiles, bf16 (16, 128)) — row padding must respect the widest
+_MIN_SUBLANES = {4: 8, 2: 16, 1: 32}
+
+
+def max_block_rows(dtype) -> int:
+    """Grid tile height for ``dtype``: ``BLOCK_BYTES`` worth of rows.
+
+    f32 -> 512 rows (the historical constant), bf16 -> 1024 — computed
+    from the ACTUAL storage itemsize so lower-precision buffers double
+    their rows per tile instead of running half-empty.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    return BLOCK_BYTES // (LANES * itemsize)
+
+
+def _sublanes(dtype) -> int:
+    return _MIN_SUBLANES.get(jnp.dtype(dtype).itemsize, 8)
 
 
 def _ceil_to(n: int, m: int) -> int:
@@ -48,6 +84,7 @@ class FlatSpec:
     ``shapes``/``sizes``/``adapt`` are per-segment (= per-leaf, in
     ``tree_flatten`` order); ``row_offset``/``seg_rows`` give each
     segment's row range inside the ``(num_rows, LANES)`` buffer.
+    ``dtype`` is the storage dtype the buffers are packed at.
     """
     treedef: Any
     shapes: tuple[tuple[int, ...], ...]
@@ -59,6 +96,7 @@ class FlatSpec:
     block_rows: int                  # grid tile height for the kernels
     num_segments: int
     nseg_pad: int                    # segments padded to a LANES multiple
+    dtype: Any = jnp.float32         # storage dtype of packed buffers
 
     # ---- derived jnp constants (trace-time; folded into the jaxpr) ----
 
@@ -79,14 +117,17 @@ class FlatSpec:
 
 
 @functools.lru_cache(maxsize=64)
-def _build_spec_cached(treedef, shapes: tuple, labels: tuple) -> FlatSpec:
+def _build_spec_cached(treedef, shapes: tuple, labels: tuple,
+                       dtype_str: str) -> FlatSpec:
+    dtype = jnp.dtype(dtype_str)
     sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
     seg_rows = tuple(max(1, _ceil_to(n, LANES) // LANES) for n in sizes)
     offsets, acc = [], 0
     for r in seg_rows:
         offsets.append(acc)
         acc += r
-    block_rows = MAX_BLOCK_ROWS if acc >= MAX_BLOCK_ROWS else _ceil_to(acc, 8)
+    mbr = max_block_rows(dtype)
+    block_rows = mbr if acc >= mbr else _ceil_to(acc, _sublanes(dtype))
     num_rows = _ceil_to(acc, block_rows)
     nseg = len(shapes)
     return FlatSpec(
@@ -94,25 +135,31 @@ def _build_spec_cached(treedef, shapes: tuple, labels: tuple) -> FlatSpec:
         row_offset=tuple(offsets), seg_rows=seg_rows,
         adapt=tuple(t == labels_lib.ADAPT for t in labels),
         num_rows=num_rows, block_rows=block_rows, num_segments=nseg,
-        nseg_pad=_ceil_to(max(nseg, 1), LANES))
+        nseg_pad=_ceil_to(max(nseg, 1), LANES), dtype=dtype)
 
 
-def build_spec(params: PyTree, param_labels: PyTree | None = None
-               ) -> FlatSpec:
-    """Compute (cached) static packing metadata for ``params``."""
+def build_spec(params: PyTree, param_labels: PyTree | None = None,
+               dtype=jnp.float32) -> FlatSpec:
+    """Compute (cached) static packing metadata for ``params``.
+
+    ``dtype`` is the STORAGE dtype of the packed buffers; tile sizing
+    and row padding are derived from it (see :func:`max_block_rows`).
+    """
     lab = param_labels if param_labels is not None \
         else labels_lib.default_labels(params)
     leaves, treedef = jax.tree_util.tree_flatten(params)
     lab_leaves = treedef.flatten_up_to(lab)
     shapes = tuple(tuple(x.shape) for x in leaves)
-    return _build_spec_cached(treedef, shapes, tuple(lab_leaves))
+    return _build_spec_cached(treedef, shapes, tuple(lab_leaves),
+                              jnp.dtype(dtype).name)
 
 
 def pack(leaves: Sequence[jnp.ndarray], spec: FlatSpec) -> jnp.ndarray:
-    """Pack leaf arrays (tree_flatten order) into (num_rows, LANES) f32."""
+    """Pack leaf arrays (tree_flatten order) into (num_rows, LANES) at
+    the spec's storage dtype."""
     parts = []
     for leaf, rows, size in zip(leaves, spec.seg_rows, spec.sizes):
-        flat = jnp.ravel(leaf).astype(jnp.float32)
+        flat = jnp.ravel(leaf).astype(spec.dtype)
         pad = rows * LANES - size
         if pad:
             flat = jnp.pad(flat, (0, pad))
@@ -120,7 +167,7 @@ def pack(leaves: Sequence[jnp.ndarray], spec: FlatSpec) -> jnp.ndarray:
     used = sum(spec.seg_rows)
     tail = (spec.num_rows - used) * LANES
     if tail or not parts:
-        parts.append(jnp.zeros((tail,), jnp.float32))
+        parts.append(jnp.zeros((tail,), spec.dtype))
     return jnp.concatenate(parts).reshape(spec.num_rows, LANES)
 
 
@@ -129,7 +176,8 @@ def pack_tree(tree: PyTree, spec: FlatSpec) -> jnp.ndarray:
 
 
 def unpack(flat2d: jnp.ndarray, spec: FlatSpec) -> list[jnp.ndarray]:
-    """Slice the flat buffer back into per-leaf f32 arrays."""
+    """Slice the flat buffer back into per-leaf arrays (the buffer's
+    own dtype — f32 deltas stay f32, bf16 state stays bf16)."""
     flat = flat2d.reshape(-1)
     out = []
     for off, size, shape in zip(spec.row_offset, spec.sizes, spec.shapes):

@@ -38,9 +38,12 @@ def lamb(learning_rate: Schedule, *, b1: float = 0.9, b2: float = 0.999,
          eps: float = 1e-6, weight_decay: float = 5e-4,
          trust_clip: Optional[float] = 10.0,
          param_labels: Optional[PyTree] = None,
-         use_kernel=False) -> GradientTransform:
+         use_kernel=False, precision: str = "f32") -> GradientTransform:
+    """``precision`` ("f32" | "bf16_master" | "bf16_master_sr", fused
+    only) stores BOTH Adam moments at the policy's dtype — the largest
+    state-memory win in the family (2 buffers/param)."""
     return layerwise_transform(
         learning_rate, mode="lamb", state_cls=LambState, b1=b1, b2=b2,
         eps=eps, weight_decay=weight_decay, trust_clip=trust_clip,
         param_labels=param_labels, use_kernel=use_kernel,
-        optimizer_name="lamb")
+        precision=precision, optimizer_name="lamb")

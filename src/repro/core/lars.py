@@ -67,15 +67,18 @@ def lars(learning_rate: Schedule, *, eta: float = 1e-3,
          eps: float = 1e-9, nesterov: bool = False,
          trust_clip: Optional[float] = None,
          param_labels: Optional[PyTree] = None,
-         use_kernel=False) -> GradientTransform:
+         use_kernel=False, precision: str = "f32") -> GradientTransform:
     """Build a LARS GradientTransform. Updates are returned as deltas.
 
     ``trust_clip`` caps the trust ratio (LAMBC-style clipping, Fong et
     al. 2020 — cited in the paper's related work as a stability
-    alternative to warm-up); None reproduces vanilla LARS."""
+    alternative to warm-up); None reproduces vanilla LARS.
+    ``precision`` ("f32" | "bf16_master" | "bf16_master_sr", fused
+    only) selects the flat substrate's storage dtype — see
+    ``repro.core.layerwise``."""
     return layerwise_transform(
         learning_rate, mode="lars", state_cls=LarsState, eta=eta,
         momentum=momentum, weight_decay=weight_decay, eps=eps,
         nesterov=nesterov, trust_clip=trust_clip,
         param_labels=param_labels, use_kernel=use_kernel,
-        optimizer_name="lars")
+        precision=precision, optimizer_name="lars")

@@ -29,6 +29,30 @@ Unsupported combinations (e.g. ``"per_tensor"`` with ``trust_clip`` or
 TVLARS "paper" momentum) raise at build time instead of silently
 falling back — see ``_validate_use_kernel``.
 
+Mixed precision (fused path only) — ``precision=``:
+
+  * ``"f32"``            — everything f32 (bitwise the legacy path).
+  * ``"bf16_master"``    — the flat substrate stores working params,
+                           grads and momentum/Adam moments in bf16
+                           (half the optimizer-state memory and HBM
+                           traffic of the bandwidth-bound fused step),
+                           while the kernels upcast tiles to f32 in
+                           VMEM, accumulate segment norms and the
+                           trust table strictly in f32, and emit the
+                           delta in f32 — the split-SGD master-weight
+                           idiom, with the caller's full-precision
+                           params as the f32 master rows.
+  * ``"bf16_master_sr"`` — same, plus stochastic rounding on the bf16
+                           state write-back (unbiased momentum
+                           accumulation; seeded per step).
+
+Tolerances: kernel-vs-oracle deltas (and therefore the f32 master
+params) stay <= 1e-6 at any policy — both round at the same program
+points, so ``REPRO_FORCE_REF=1`` remains ground truth. The bf16 STATE
+buffers may disagree by at most one storage ulp (an ~1e-8 f32
+accumulation-order difference can land on a bf16 rounding boundary);
+policy-vs-f32-reference is bounded by ``ref.parity_tolerance``.
+
 The elementwise math itself lives in ``repro.kernels.ref``
 (:func:`~repro.kernels.ref.direction` /
 :func:`~repro.kernels.ref.integrate` /
@@ -51,8 +75,31 @@ UseKernel = Union[bool, str]
 
 KERNEL_CHOICES = (False, "per_tensor", "fused")
 
+PRECISIONS = ("f32", "bf16_master", "bf16_master_sr")
+
 # which (mode, feature) combos the per-tensor kernel can express
 _PER_TENSOR_MODES = ("lars",)
+
+
+def storage_dtype(precision: str):
+    """The flat substrate's storage dtype under ``precision``."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"precision={precision!r}; expected one of {PRECISIONS}")
+    return jnp.float32 if precision == "f32" else jnp.bfloat16
+
+
+def _validate_precision(precision: str, use_kernel: UseKernel,
+                        optimizer: str) -> None:
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"{optimizer}: precision={precision!r}; expected one of "
+            f"{PRECISIONS}")
+    if precision != "f32" and use_kernel != "fused":
+        raise ValueError(
+            f"{optimizer}: precision={precision!r} requires "
+            f"use_kernel='fused' — only the flat substrate has a "
+            f"storage-dtype axis (got use_kernel={use_kernel!r})")
 
 
 def normalize_use_kernel(use_kernel: UseKernel) -> UseKernel:
@@ -100,6 +147,7 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
                         trust_clip: Optional[float] = None,
                         param_labels: Optional[PyTree] = None,
                         use_kernel: UseKernel = False,
+                        precision: str = "f32",
                         optimizer_name: str = "layerwise",
                         ) -> GradientTransform:
     """Build a layer-wise GradientTransform. Updates are deltas.
@@ -108,13 +156,18 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
     Algorithm 1 parameter-space momentum) or "lamb" (Adam moments).
     ``state_cls(step, *bufs)`` is the optimizer's public state
     NamedTuple; buffers are momentum trees (unfused/per-tensor) or flat
-    ``(rows, 128)`` substrate arrays (fused).
+    ``(rows, 128)`` substrate arrays (fused) at the ``precision``
+    policy's storage dtype (f32, or bf16 under ``"bf16_master"`` /
+    ``"bf16_master_sr"`` — fused only).
     """
     if mode not in ref.MODES:
         raise ValueError(f"unknown mode {mode!r}; one of {ref.MODES}")
     use_kernel = normalize_use_kernel(use_kernel)
     _validate_use_kernel(use_kernel, mode=mode, trust_clip=trust_clip,
                          optimizer=optimizer_name)
+    _validate_precision(precision, use_kernel, optimizer_name)
+    sdtype = storage_dtype(precision)
+    stochastic = precision.endswith("_sr")
     n_bufs = 2 if mode == "lamb" else 1
 
     def _labels(params):
@@ -136,7 +189,8 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
     def init(params):
         bufs = _init_buffer_trees(params)
         if use_kernel == "fused":
-            spec = flatten.build_spec(params, _labels(params))
+            spec = flatten.build_spec(params, _labels(params),
+                                      dtype=sdtype)
             bufs = tuple(flatten.pack_tree(b, spec) for b in bufs)
         return state_cls(jnp.zeros((), jnp.int32), *bufs)
 
@@ -150,7 +204,10 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
     # ---- fused path: flat substrate, two pallas_calls per step ----
 
     def _update_fused(grads, state, params):
-        spec = flatten.build_spec(params, _labels(params))
+        # the packed buffers are the WORKING copies at the storage
+        # dtype; ``params`` itself is the f32 master the f32 delta is
+        # applied to outside (split-SGD structure)
+        spec = flatten.build_spec(params, _labels(params), dtype=sdtype)
         base_lr, bc1, bc2 = _step_scalars(state)
         from repro.kernels import ops as kops
         new_bufs, delta2d = kops.segmented_update(
@@ -160,7 +217,8 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
             base_lr=base_lr, mode=mode, eta=eta,
             weight_decay=weight_decay, momentum=momentum, b1=b1, b2=b2,
             eps=eps, nesterov=nesterov, trust_clip=trust_clip,
-            bc1=bc1, bc2=bc2)
+            bc1=bc1, bc2=bc2, stochastic_round=stochastic,
+            seed=state.step)
         updates = flatten.unpack_tree(delta2d, spec)
         return updates, state_cls(state.step + 1, *new_bufs)
 

@@ -52,9 +52,13 @@ def tvlars(gamma_target: float, *, lam: float = 1e-4,
            momentum: float = 0.9, weight_decay: float = 5e-4,
            eps: float = 1e-9, momentum_style: str = "paper",
            param_labels: Optional[PyTree] = None,
-           use_kernel=False) -> GradientTransform:
+           use_kernel=False, precision: str = "f32") -> GradientTransform:
     """Build TVLARS. ``gamma_target`` is the target LR of Table 1;
-    ``gamma_min`` is typically (B/B_base)·1e-3 (§5.2.1)."""
+    ``gamma_min`` is typically (B/B_base)·1e-3 (§5.2.1).
+    ``precision`` selects the fused substrate's storage dtype (see
+    ``repro.core.layerwise``); note the "paper" momentum buffer stores
+    previous proposed PARAMS, so under bf16 it carries bf16-rounded
+    params — covered by the documented parity bound."""
     if momentum_style not in ("paper", "lars"):
         raise ValueError(f"unknown momentum_style {momentum_style!r}")
     phi = tvlars_phi(lam, delay_steps, alpha, gamma_min)
@@ -66,4 +70,4 @@ def tvlars(gamma_target: float, *, lam: float = 1e-4,
         base_lr, mode=momentum_style, state_cls=TVLarsState, eta=eta,
         momentum=momentum, weight_decay=weight_decay, eps=eps,
         param_labels=param_labels, use_kernel=use_kernel,
-        optimizer_name="tvlars")
+        precision=precision, optimizer_name="tvlars")

@@ -52,7 +52,11 @@ def segmented_update(w2d, g2d, bufs, **kw):
     """Segmented whole-tree layer-wise step -> (new_bufs, delta2d).
 
     ``kw``: seg_ids, adapt_mask, base_lr, mode, eta, weight_decay,
-    momentum, b1, b2, eps, nesterov, trust_clip, bc1, bc2.
+    momentum, b1, b2, eps, nesterov, trust_clip, bc1, bc2, plus the
+    mixed-precision knobs ``stochastic_round``/``seed`` (state buffers
+    keep their storage dtype; the delta is always f32 — kernel and
+    oracle round at identical points, so REPRO_FORCE_REF=1 remains
+    ground truth at any precision policy).
     """
     if _force_ref():
         return ref.ref_segmented_update(w2d, g2d, bufs, **kw)

@@ -17,6 +17,18 @@ The unified update for every optimizer in the family is
     new, delta = integrate(mode, ...)        # heavy ball / Alg.1 / none
 
 with per-segment (sg, sw) from :func:`trust_scale_table`.
+
+Mixed precision: the segmented oracle (and kernels) accept flat buffers
+at ANY storage dtype. Every operand is upcast to f32 on read, all math
+— segment norms, the trust table, momentum integration — runs strictly
+in f32, state buffers are written back at their own storage dtype
+(round-to-nearest, or :func:`stochastic_round_to` under the ``_sr``
+policies) and the weight-update delta is ALWAYS emitted in f32 so the
+caller's f32 master params never see storage rounding. The oracle
+rounds at exactly the same program points as the kernels, so
+``REPRO_FORCE_REF=1`` stays the bitwise-comparable ground truth at
+every precision policy; :func:`parity_tolerance` is the documented
+bound for comparing a low-precision policy against the f32 reference.
 """
 from __future__ import annotations
 
@@ -24,6 +36,77 @@ import jax
 import jax.numpy as jnp
 
 MODES = ("lars", "paper", "lamb")
+
+
+# ---------------------------------------------------------------------------
+# precision model: parity bounds + stochastic rounding
+# ---------------------------------------------------------------------------
+
+def parity_tolerance(precision: str, steps: int = 1) -> dict:
+    """Documented bound for fused-vs-f32-reference update parity.
+
+    * ``"f32"`` — the substrate stores exact f32 copies; the only
+      divergence is norm-accumulation order, bounded at 1e-6.
+    * ``"bf16_master"`` (and ``_sr``) — params/grads/momentum are
+      rounded once to bf16 (8-bit mantissa, round-to-nearest error
+      <= 2^-9 relative per operand) before the f32 math, so each
+      step's update carries a few-ulp-of-bf16 relative error; momentum
+      state compounds it linearly in ``steps``. The bound is
+      ``4·2^-8·steps`` relative with a matching absolute floor scaled
+      to O(1) update magnitudes.
+
+    Kernel-vs-oracle parity is NOT governed by this bound: both round
+    at identical program points, so they agree to <= 1e-6 at any
+    policy (see ``tests/test_precision.py``).
+    """
+    if precision == "f32":
+        return {"rtol": 1e-6, "atol": 1e-6}
+    eps = 2.0 ** -8
+    return {"rtol": 4 * eps * steps, "atol": 4 * eps * steps}
+
+
+def hash_bits(idx: jnp.ndarray, seed) -> jnp.ndarray:
+    """Counter-based uint32 hash of per-element indices (xxhash-style
+    avalanche) — the stateless RNG behind stochastic rounding. Pure
+    elementwise integer ops, so it runs identically inside a Pallas
+    kernel and in this oracle (indices wrap at 2^32 elements; fine for
+    hashing)."""
+    x = idx.astype(jnp.uint32) * jnp.uint32(2654435761)
+    x = x + jnp.asarray(seed, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(2246822519)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(3266489917)
+    return x ^ (x >> 16)
+
+
+def stochastic_round_to(x: jnp.ndarray, bits: jnp.ndarray,
+                        dtype) -> jnp.ndarray:
+    """Stochastically round f32 ``x`` to bf16 using uniform ``bits``.
+
+    bf16 is the top 16 bits of f32, so adding a uniform uint16 to the
+    f32 bit pattern and truncating the low half rounds x up with
+    probability equal to the discarded fraction — unbiased in
+    expectation, unlike round-to-nearest whose per-step momentum bias
+    compounds. Non-bf16 dtypes fall back to round-to-nearest.
+    """
+    if jnp.dtype(dtype) != jnp.dtype(jnp.bfloat16):
+        return x.astype(dtype)
+    x32 = x.astype(jnp.float32)
+    u = jax.lax.bitcast_convert_type(x32, jnp.uint32)
+    u = (u + (bits & jnp.uint32(0xFFFF))) & jnp.uint32(0xFFFF0000)
+    rounded = jax.lax.bitcast_convert_type(u, jnp.float32)
+    # inf/nan bit patterns must not be perturbed by the mantissa add
+    return jnp.where(jnp.isfinite(x32), rounded, x32).astype(dtype)
+
+
+def store(x: jnp.ndarray, dtype, *, bits: jnp.ndarray | None = None
+          ) -> jnp.ndarray:
+    """Write-back cast for state buffers: round-to-nearest, or
+    stochastic when ``bits`` is given (the ``_sr`` policies)."""
+    if bits is not None:
+        return stochastic_round_to(x, bits, dtype)
+    return x.astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -124,25 +207,52 @@ def ref_lars_update(w: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray, *,
 # segmented (fused multi-tensor) oracle — matches kernels/segmented_update.py
 # ---------------------------------------------------------------------------
 
+def buf_bits(idx: jnp.ndarray, seed, buf: int) -> jnp.ndarray:
+    """Random bits for state-buffer ``buf``'s write-back — the seed is
+    golden-ratio-mixed per buffer so LAMB's mu and nu draw independent
+    streams. Shared verbatim by oracle and kernel."""
+    return hash_bits(idx, jnp.asarray(seed, jnp.uint32)
+                     + jnp.uint32(buf) * jnp.uint32(0x9E3779B9))
+
+
+def element_index(rows: int, lanes: int, row0: int = 0) -> jnp.ndarray:
+    """(rows, lanes) int32 global flat element index starting at row
+    ``row0`` — the SR hash counter. In the kernel ``row0`` is the grid
+    step's first row, so per-block bits equal the oracle's."""
+    r = jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 0) + row0
+    c = jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 1)
+    return r * lanes + c
+
+
 def ref_segmented_update(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
                          mode: str, eta: float, weight_decay: float,
                          momentum: float, b1: float, b2: float, eps: float,
                          nesterov: bool = False, trust_clip=None,
-                         bc1=1.0, bc2=1.0):
+                         bc1=1.0, bc2=1.0, stochastic_round: bool = False,
+                         seed=0):
     """Whole-tree layer-wise step on the flat substrate, in pure jnp.
 
-    Inputs are ``(num_rows, LANES)`` f32 buffers from
-    ``repro.core.flatten.pack`` plus the spec's ``(num_rows, 1)``
-    segment-id map and ``(nseg,)`` adapt mask. Returns
-    ``(new_bufs, delta2d)`` with the same flat layout.
+    Inputs are ``(num_rows, LANES)`` buffers from
+    ``repro.core.flatten.pack`` — at ANY storage dtype — plus the
+    spec's ``(num_rows, 1)`` segment-id map and ``(nseg,)`` adapt mask.
+    Operands are upcast to f32 on read; segment norms, the trust table
+    and the integration run strictly in f32; new state buffers are
+    written back at their input storage dtype (stochastically rounded
+    when ``stochastic_round``, seeded per step by ``seed``) and the
+    returned ``delta2d`` is always f32. Returns ``(new_bufs, delta2d)``
+    with the same flat layout.
     """
     nseg = adapt_mask.shape[0]
     ids = seg_ids.reshape(-1)
+    state_dtypes = tuple(b.dtype for b in bufs)
+    w32 = w2d.astype(jnp.float32)
+    g32 = g2d.astype(jnp.float32)
+    bufs32 = tuple(b.astype(jnp.float32) for b in bufs)
 
-    d, bufs2 = direction(mode, w2d, g2d, bufs, b1=b1, b2=b2,
+    d, bufs2 = direction(mode, w32, g32, bufs32, b1=b1, b2=b2,
                          bc1=bc1, bc2=bc2, eps=eps)
-    bvec = d + weight_decay * w2d if mode == "lamb" else g2d
-    row_w2 = jnp.sum(jnp.square(w2d), axis=1)
+    bvec = d + weight_decay * w32 if mode == "lamb" else g32
+    row_w2 = jnp.sum(jnp.square(w32), axis=1)
     row_b2 = jnp.sum(jnp.square(bvec), axis=1)
     w2 = jax.ops.segment_sum(row_w2, ids, num_segments=nseg)
     b2sum = jax.ops.segment_sum(row_b2, ids, num_segments=nseg)
@@ -152,9 +262,14 @@ def ref_segmented_update(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
                               trust_clip=trust_clip)
     sg = table[0][ids][:, None]
     sw = table[1][ids][:, None]
-    scaled = sg * d + sw * w2d
-    new_bufs, delta = integrate(mode, w2d, bufs2, scaled,
+    scaled = sg * d + sw * w32
+    new_bufs, delta = integrate(mode, w32, bufs2, scaled,
                                 momentum=momentum, nesterov=nesterov)
+    idx = element_index(*w2d.shape) if stochastic_round else None
+    new_bufs = tuple(
+        store(nb, dt, bits=buf_bits(idx, seed, k)
+              if stochastic_round else None)
+        for k, (nb, dt) in enumerate(zip(new_bufs, state_dtypes)))
     return new_bufs, delta
 
 

@@ -23,7 +23,11 @@ Large-batch execution: ``--global-batch`` is the total samples per
 optimizer step and ``--microbatch`` the per-device-pass batch; when they
 differ the step scan-accumulates K = global/(micro·D) microbatches in
 f32 and applies the optimizer once per global step (two
-``pallas_call``s under ``use_kernel="fused"``, regardless of K). The
+``pallas_call``s under ``--use-kernel fused``, regardless of K).
+``--precision bf16_master[_sr]`` additionally stores the fused
+substrate's momentum/Adam state in bf16 (f32 master params, strictly
+f32 norm/table accumulation — see ``repro.core.layerwise``), halving
+optimizer-state bytes per step. The
 optimizer/schedule are built from the *global* batch size — that is
 what the paper's batch-size LR scaling (§5.2.2) and TVLARS's γ_min
 (§5.2.1) key off.
@@ -58,6 +62,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core import build_optimizer
+from repro.core.layerwise import PRECISIONS
 from repro.data import pipeline
 from repro.data.synthetic import lm_batch, lm_sample_source
 from repro.diagnostics import probes
@@ -90,6 +95,18 @@ def main() -> None:
                     help="per-device-pass batch; K = global/micro grads "
                          "are accumulated (default: --global-batch)")
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--use-kernel", default="off",
+                    choices=("off", "per_tensor", "fused"),
+                    help="optimizer dispatch path: 'fused' runs the "
+                         "whole update as two segmented pallas_calls "
+                         "(see repro.core.layerwise)")
+    ap.add_argument("--precision", default="f32", choices=PRECISIONS,
+                    help="fused-substrate storage policy: 'bf16_master' "
+                         "stores momentum/Adam state in bf16 with f32 "
+                         "master params + f32 norm accumulation (half "
+                         "the optimizer-state bytes); '_sr' adds "
+                         "stochastic rounding on the state write-back. "
+                         "Non-f32 requires --use-kernel fused")
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--mesh-data", type=int, default=None,
@@ -191,12 +208,20 @@ def main() -> None:
     except ValueError as e:
         raise SystemExit(str(e)) from e
 
+    use_kernel = False if args.use_kernel == "off" else args.use_kernel
+    if args.precision != "f32" and args.use_kernel != "fused":
+        raise SystemExit(
+            f"--precision {args.precision} requires --use-kernel fused "
+            f"(the mixed-precision substrate IS the fused flat buffer)")
+
     def optimizer_for(batch_size: int):
         # schedules/γ_min see the TRUE global batch (samples per
         # optimizer step), not a token-count heuristic
         return build_optimizer(args.optimizer, total_steps=args.steps,
                                learning_rate=args.learning_rate,
-                               batch_size=batch_size)
+                               batch_size=batch_size,
+                               use_kernel=use_kernel,
+                               precision=args.precision)
 
     controller = None
     if args.adaptive_batch:
@@ -312,7 +337,8 @@ def main() -> None:
         print(f"global_batch={global_batch} microbatch={microbatch} "
               f"accum_steps={accum_steps} "
               f"data_parallel={mesh_data if mesh_native else 1} "
-              f"mesh={tuple(mesh.shape.items())}")
+              f"mesh={tuple(mesh.shape.items())} "
+              f"use_kernel={args.use_kernel} precision={args.precision}")
 
         static = {"arch": args.arch, "optimizer": args.optimizer}
         if controller is None:

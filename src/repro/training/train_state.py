@@ -4,7 +4,11 @@ Works unchanged with every optimizer dispatch path: when the optimizer
 was built with ``use_kernel="fused"``, ``opt_state`` holds flat
 ``(rows, 128)`` substrate buffers (see ``repro.core.flatten``) instead
 of per-leaf momentum trees — still ordinary pytree leaves, so jit/pjit,
-donation and checkpointing are unaffected.
+donation and checkpointing are unaffected. Under a non-f32
+``precision`` policy those buffers are bf16 while ``params`` stays the
+f32 MASTER copy (split-SGD structure): the kernel emits an f32 delta
+that is applied to the f32 params, so ``opt_buffer_bytes`` halves but
+master precision never degrades.
 
 The mesh-native data-parallel train step
 (``trainer.make_train_step(mesh=...)``) requires the whole state
@@ -51,6 +55,7 @@ def opt_buffer_bytes(state: TrainState) -> int:
 
     Useful for comparing the per-leaf tree layout against the fused
     flat-substrate layout (which pays a little lane/row padding in
-    exchange for two-kernel steps)."""
+    exchange for two-kernel steps), and f32 vs bf16 precision policies
+    (itemsize-aware, so bf16 substrate buffers report half the bytes)."""
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(state.opt_state))

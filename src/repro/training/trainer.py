@@ -31,6 +31,13 @@ activations + one f32 grad buffer), then applies the optimizer exactly
 once per global step. Under ``use_kernel="fused"`` that single
 application is still exactly two ``pallas_call``s regardless of K.
 
+Precision: grads are accumulated and averaged in f32 and ``params``
+stay f32 regardless of the optimizer's ``precision`` policy — under
+``"bf16_master"`` only the fused substrate's state buffers (inside
+``opt_state``) are bf16, and the optimizer hands back an f32 delta
+that ``apply_updates`` adds to the f32 master params. Nothing in this
+module branches on the policy.
+
 Metrics include mean LWN/LGN/LNR so the paper's Fig. 2 telemetry is free
 at every step; with accumulation those norms are computed on the
 *accumulated* (global-batch) gradients, so the traces reflect the true

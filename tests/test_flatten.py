@@ -96,3 +96,36 @@ def test_large_tree_uses_block_tiling():
     spec = flatten.build_spec(tree)
     assert spec.block_rows == flatten.MAX_BLOCK_ROWS
     assert spec.num_rows % flatten.MAX_BLOCK_ROWS == 0
+
+
+def test_storage_dtype_pack_round_trip():
+    """bf16 storage: pack casts to the spec dtype, padding stays exactly
+    zero (0 is representable at any dtype), and unpack returns the
+    bf16-rounded values at the STORAGE dtype."""
+    tree = _make(MIXED_TREE, jnp.float32)
+    spec = flatten.build_spec(tree, dtype=jnp.bfloat16)
+    flat = flatten.pack_tree(tree, spec)
+    assert flat.dtype == jnp.bfloat16
+    assert flat.shape == (spec.num_rows, flatten.LANES)
+    rows = np.asarray(flat, np.float32).reshape(-1)
+    mask = np.zeros_like(rows, dtype=bool)
+    for off, size in zip(spec.row_offset, spec.sizes):
+        mask[off * flatten.LANES:off * flatten.LANES + size] = True
+    assert (rows[~mask] == 0.0).all()
+    out = flatten.unpack_tree(flat, spec)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert b.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(a.astype(jnp.bfloat16), np.float32),
+            np.asarray(b, np.float32))
+
+
+def test_block_tiling_is_dtype_aware():
+    tree = {"big": jnp.ones((1024, 256))}   # 2048 rows = 4 f32 tiles
+    s32 = flatten.build_spec(tree, dtype=jnp.float32)
+    sbf = flatten.build_spec(tree, dtype=jnp.bfloat16)
+    assert s32.block_rows == flatten.max_block_rows(jnp.float32) == 512
+    assert sbf.block_rows == flatten.max_block_rows(jnp.bfloat16) == 1024
+    # same BYTES per tile — the budget is dtype-invariant
+    assert s32.block_rows * 4 == sbf.block_rows * 2

@@ -8,6 +8,9 @@
 #   3. CPU end-to-end launcher smoke with gradient accumulation (K=4),
 #      streaming metrics to experiments/bench/smoke_launcher.jsonl
 #   4. diagnostics probe smoke (tiny MLP, 2 Lanczos iters, JSONL schema)
+#   4b. kernel bench quick sweep — writes the machine-readable
+#      experiments/bench/BENCH_kernels.json trajectory (per-precision
+#      us/step, pallas_call counts, modeled HBM bytes/step)
 #   5. multidevice: mesh-native numerics on 8 fabricated CPU devices
 #      (shard_map train-step parity, DP controller (D,K) retargeting,
 #      cross-mesh checkpoint round-trips; the GSPMD-parity subprocess
@@ -29,7 +32,7 @@ python -m pytest -x -q
 echo "== kernel-oracle re-run (REPRO_FORCE_REF=1) =="
 REPRO_FORCE_REF=1 python -m pytest -q \
     tests/test_kernels.py tests/test_segmented_parity.py \
-    tests/test_optimizers.py
+    tests/test_optimizers.py tests/test_precision.py
 
 echo "== e2e launcher smoke (gradient accumulation K=4) =="
 python -m repro.launch.train --smoke --steps 2 --seq 64 \
@@ -38,6 +41,9 @@ python -m repro.launch.train --smoke --steps 2 --seq 64 \
 
 echo "== diagnostics probe smoke (tiny MLP, 2 Lanczos iters, JSONL schema) =="
 python -m repro.diagnostics.smoke --out experiments/bench
+
+echo "== kernel bench quick sweep (experiments/bench/BENCH_kernels.json) =="
+PYTHONPATH="src:.:$PYTHONPATH" python benchmarks/bench_kernels.py --quick
 
 echo "== multidevice (8 fabricated CPU devices: shard_map parity, DP controller, sharded ckpts; GSPMD parity ran in tier 1) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
