@@ -1,4 +1,5 @@
-.PHONY: check test fast bench smoke lint multidevice
+.PHONY: check test fast bench bench-pipeline overlap smoke lint \
+	multidevice
 
 # tier-1 suite + REPRO_FORCE_REF=1 oracle re-run (both dispatch modes)
 # + e2e launcher smoke with gradient accumulation (K>1) + probe smoke
@@ -27,6 +28,16 @@ lint:
 
 bench:
 	PYTHONPATH=src:. python benchmarks/bench_kernels.py
+
+# async host/device overlap bench: instrumented sync vs async step
+# loop (MetricRing + BufferedSink + PrefetchingStream) with metric
+# parity + 2-pallas_call assertions; writes BENCH_pipeline.json
+bench-pipeline:
+	PYTHONPATH=src:. python benchmarks/bench_pipeline.py
+
+# the async overlap subsystem's test tier (also part of `make check`)
+overlap:
+	PYTHONPATH=src python -m pytest -q -m overlap
 
 # end-to-end CPU smoke of the launcher: global batch 8 = 4 accumulated
 # microbatches of 2, optimizer applied once per global step — then the

@@ -202,9 +202,8 @@ def main() -> None:
 
     bench_optimizer_dispatch(quick=args.quick)
     bench_accumulation(quick=args.quick)
-    path = write_json(args.json_name,
-                      extra={"backend": jax.default_backend(),
-                             "interpret_mode":
+    path = write_json(args.json_name, suite="kernels",
+                      extra={"interpret_mode":
                                  jax.default_backend() == "cpu"})
     print(f"json -> {path}")
 

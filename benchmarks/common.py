@@ -1,9 +1,21 @@
-"""Shared benchmark harness utilities."""
+"""Shared benchmark harness utilities.
+
+All ``BENCH_*.json`` artifacts share ONE schema (``bench/v2``,
+:func:`write_json`): a ``suite`` name, a :func:`host_info` block
+(backend/devices/versions — so trajectories across machines are
+comparable), any suite-specific ``extra`` keys, and the ``entries``
+list where each :func:`record`-ed row carries ``name`` +
+``us_per_call`` + its derived fields.  Every bench script funnels
+through ``record()``/``write_json()`` so the human CSV lines and the
+machine-readable JSON never drift.
+"""
 from __future__ import annotations
 
 import csv
 import json
 import os
+import platform
+import sys
 import time
 from typing import Callable, Iterable
 
@@ -11,6 +23,25 @@ import jax
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "bench")
+
+BENCH_SCHEMA = "bench/v2"
+
+
+def host_info() -> dict:
+    """The environment block every ``BENCH_*.json`` carries."""
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+    }
+
+
+def _flush_argv0() -> str:
+    return os.path.basename(sys.argv[0]) if sys.argv and sys.argv[0] \
+        else ""
 
 
 def write_csv(name: str, header: list[str], rows: Iterable[tuple]) -> str:
@@ -58,11 +89,17 @@ def record(name: str, us_per_call: float, **fields) -> None:
                           "us_per_call": round(us_per_call, 1), **fields})
 
 
-def write_json(name: str, *, extra: dict | None = None) -> str:
-    """Flush record()ed entries to ``experiments/bench/<name>.json``."""
+def write_json(name: str, *, suite: str | None = None,
+               extra: dict | None = None) -> str:
+    """Flush record()ed entries to ``experiments/bench/<name>.json``
+    under the shared ``bench/v2`` schema (suite + host info + entries)."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
-    doc = {"schema": f"{name}/v1", **(extra or {}),
+    doc = {"schema": BENCH_SCHEMA,
+           "suite": suite or name,
+           "script": _flush_argv0(),
+           "host": host_info(),
+           **(extra or {}),
            "entries": list(_JSON_ENTRIES)}
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)

@@ -14,9 +14,12 @@ global batch is ``K × microbatch × data_parallel`` samples.
 """
 from __future__ import annotations
 
+import collections
+import threading
 from typing import Any, Callable, Iterator, Optional
 
 import jax
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -234,3 +237,262 @@ def microbatched_iterator(host_iter: Iterator, accum_steps: int) -> Iterator:
     """
     for batch in host_iter:
         yield stack_microbatches(batch, accum_steps)
+
+
+def device_put_batch(batch: Any) -> Any:
+    """Asynchronously start the host->device transfer of every leaf
+    (plain single-device ``jax.device_put``) — the default placement
+    for :class:`PrefetchingStream` when no mesh is involved."""
+    return jax.tree_util.tree_map(jax.device_put, batch)
+
+
+class PrefetchingStream:
+    """Background-producer prefetch over any batch stream.
+
+    A daemon thread pulls batches from ``stream`` ahead of the
+    consumer into a bounded buffer (``size=2`` = classic double
+    buffering), optionally running ``place`` on each batch *on the
+    producer thread* — with ``place=device_put_batch`` (or a
+    mesh-aware ``shard_batch`` closure) the host->device copy of batch
+    N+1 overlaps the device compute of batch N, and the synthetic
+    sources' jax-side sample generation is dispatched off the critical
+    path.  ``next()`` pops the oldest buffered batch, blocking only
+    when the producer has not kept up.  Producer exceptions (including
+    ``StopIteration`` for finite streams) are re-raised on the
+    consumer thread at the ``next()`` where they become visible.
+
+    Retargeting contract (the adaptive controller's re-stack
+    boundary): ``set_accum_steps``/``set_data_parallel`` compose with
+    prefetching via an explicit **drain-and-refill**: the producer is
+    held off its next pull, every buffered-but-unconsumed batch is
+    discarded and the underlying stream's ``position`` is rewound by
+    exactly the samples those batches had consumed, then the retarget
+    is forwarded and the buffer refills at the new shape — so a switch
+    at step N is sample-identical to switching an unprefetched
+    ``MicrobatchedStream`` at step N (no sample skipped or re-read).
+    Retargeting therefore requires the wrapped stream to expose both
+    the ``set_*`` method and a writable ``position``; plain iteration
+    does not.
+
+    Thread-compat: one producer, one consumer; ``set_*`` must be
+    called from the consumer thread between ``next()`` calls (exactly
+    how ``trainer.fit``'s controller path drives it).
+    """
+
+    def __init__(self, stream, *, size: int = 2,
+                 place: Optional[Callable[[Any], Any]] = None):
+        if size < 1:
+            raise ValueError(f"size must be >= 1, got {size}")
+        self.stream = stream
+        self.size = int(size)
+        self.place = place
+        self._buf: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        # serializes stream access: each producer pull vs. the
+        # drain-rewind-retarget critical section
+        self._plock = threading.Lock()
+        self._err: Optional[BaseException] = None
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._produce, name="PrefetchingStream-producer",
+            daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------ delegation
+    @property
+    def microbatch(self):
+        return self.stream.microbatch
+
+    @property
+    def accum_steps(self):
+        return self.stream.accum_steps
+
+    @property
+    def data_parallel(self):
+        return self.stream.data_parallel
+
+    @property
+    def global_batch(self):
+        return self.stream.global_batch
+
+    @property
+    def position(self):
+        return self.stream.position
+
+    # -------------------------------------------------------- producer
+    def _produce(self) -> None:
+        while True:
+            with self._cv:
+                while len(self._buf) >= self.size and not self._stop:
+                    self._cv.wait()
+                if self._stop:
+                    return
+            with self._plock:
+                if self._stop:
+                    return
+                try:
+                    pos0 = getattr(self.stream, "position", None)
+                    batch = next(self.stream)
+                    if self.place is not None:
+                        batch = self.place(batch)
+                    consumed = None if pos0 is None \
+                        else self.stream.position - pos0
+                except BaseException as e:   # incl. StopIteration
+                    with self._cv:
+                        self._err = e
+                        self._cv.notify_all()
+                    return
+            with self._cv:
+                self._buf.append((batch, consumed))
+                self._cv.notify_all()
+
+    # -------------------------------------------------------- consumer
+    def __iter__(self) -> "PrefetchingStream":
+        return self
+
+    def __next__(self):
+        with self._cv:
+            while not self._buf and self._err is None:
+                self._cv.wait()
+            if self._buf:
+                batch, _ = self._buf.popleft()
+                self._cv.notify_all()
+                return batch
+            err = self._err
+        if isinstance(err, StopIteration):
+            raise StopIteration
+        raise err
+
+    # ------------------------------------------------------ retargeting
+    def _drain_and(self, apply: Callable[[], None]) -> None:
+        """Drain-and-refill: with the producer parked (plock held, so
+        no pull is in flight), rewind the wrapped stream past every
+        unconsumed buffered batch, apply the retarget, and let the
+        buffer refill at the new shape."""
+        with self._plock:
+            with self._cv:
+                unconsumed = 0
+                for _, n in self._buf:
+                    if n is None:
+                        raise RuntimeError(
+                            "PrefetchingStream: cannot retarget over a "
+                            "stream without a sample position "
+                            "(drain/rewind needs stream.position)")
+                    unconsumed += n
+                self._buf.clear()
+                if unconsumed:
+                    self.stream.position -= unconsumed
+                apply()
+                self._cv.notify_all()
+
+    def set_accum_steps(self, accum_steps: int) -> None:
+        if getattr(self.stream, "accum_steps", None) == accum_steps:
+            return
+        self._drain_and(
+            lambda: self.stream.set_accum_steps(accum_steps))
+
+    def set_data_parallel(self, data_parallel: int) -> None:
+        if getattr(self.stream, "data_parallel", None) == data_parallel:
+            return
+        self._drain_and(
+            lambda: self.stream.set_data_parallel(data_parallel))
+
+    # ---------------------------------------------------------- close
+    def close(self) -> None:
+        """Stop the producer (idempotent); buffered batches are
+        dropped."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "PrefetchingStream":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class LengthBucketedStream:
+    """Length-bucketing for LM batches (the tensor2tensor
+    ``data_reader`` idiom): group samples of similar length so each
+    batch only pads to its *bucket boundary* instead of the global
+    max — less pad compute per token at the cost of one compiled step
+    per bucket shape (bounded by ``len(boundaries)``).
+
+    ``source`` is a sample-level provider ``(start, count) -> batch``
+    whose dict batches carry a per-sample ``"length"`` leaf (e.g.
+    :func:`repro.data.synthetic.lm_varlen_sample_source`); sequence
+    leaves are padded to a common max length.  The stream pulls
+    ``lookahead × microbatch`` samples at a time in index order,
+    queues each sample into the smallest bucket whose boundary covers
+    its length, and yields a ``microbatch``-sized batch from the
+    first full bucket (FIFO within a bucket), with every sequence
+    leaf trimmed to the bucket boundary.  Deterministic: the same
+    source + boundaries + microbatch always yields the same batches,
+    and every pulled sample is yielded exactly once (lookahead
+    leftovers stay queued for later batches).
+    """
+
+    def __init__(self, source, microbatch: int,
+                 boundaries: tuple[int, ...], *, lookahead: int = 8,
+                 length_key: str = "length", position: int = 0):
+        if microbatch < 1:
+            raise ValueError(f"microbatch must be >= 1, got {microbatch}")
+        if lookahead < 1:
+            raise ValueError(f"lookahead must be >= 1, got {lookahead}")
+        bounds = tuple(sorted(int(b) for b in boundaries))
+        if not bounds or any(b < 1 for b in bounds) \
+                or len(set(bounds)) != len(bounds):
+            raise ValueError(
+                f"boundaries must be distinct positive ints, "
+                f"got {boundaries}")
+        self.source = source
+        self.microbatch = int(microbatch)
+        self.boundaries = bounds
+        self.lookahead = int(lookahead)
+        self.length_key = length_key
+        self.position = int(position)
+        self._buckets: dict[int, list] = {b: [] for b in bounds}
+
+    def _bucket_of(self, length: int) -> int:
+        for b in self.boundaries:
+            if length <= b:
+                return b
+        return self.boundaries[-1]   # longer than the last boundary:
+        # padded sequences are never extended, only trimmed less
+
+    def _refill(self) -> None:
+        n = self.lookahead * self.microbatch
+        batch = self.source(self.position, n)
+        self.position += n
+        lengths = np.asarray(batch[self.length_key])
+        host = {k: np.asarray(v) for k, v in batch.items()}
+        for i in range(n):
+            b = self._bucket_of(int(lengths[i]))
+            self._buckets[b].append(
+                {k: v[i] for k, v in host.items()})
+
+    def queued(self) -> int:
+        """Samples pulled from the source but not yet yielded."""
+        return sum(len(q) for q in self._buckets.values())
+
+    def __iter__(self) -> "LengthBucketedStream":
+        return self
+
+    def __next__(self) -> dict:
+        while True:
+            for b in self.boundaries:
+                q = self._buckets[b]
+                if len(q) >= self.microbatch:
+                    rows, self._buckets[b] = \
+                        q[:self.microbatch], q[self.microbatch:]
+                    out = {}
+                    for k in rows[0]:
+                        stackd = np.stack([r[k] for r in rows])
+                        if stackd.ndim >= 2 and stackd.shape[1] > b:
+                            stackd = stackd[:, :b]   # trim pad to the
+                            # bucket boundary (sequence leaves only)
+                        out[k] = stackd
+                    return out
+            self._refill()

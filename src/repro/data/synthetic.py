@@ -137,6 +137,37 @@ def lm_sample_source(seq_len: int, vocab: int, seed: int = 0):
     return source
 
 
+def lm_varlen_sample_source(max_seq: int, vocab: int, seed: int = 0,
+                            *, min_seq: int = 1):
+    """Variable-length LM sample source for length-bucketing tests.
+
+    Returns ``(start, count) -> {"tokens", "labels", "length"}`` with
+    every sequence leaf padded to ``max_seq`` (zeros past ``length``)
+    and a per-sample ``length`` drawn uniformly from
+    ``[min_seq, max_seq]`` — both tokens and length depend only on the
+    sample's absolute index, like every other sample source here, so
+    :class:`repro.data.pipeline.LengthBucketedStream` is fully
+    deterministic over it.
+    """
+    if not 1 <= min_seq <= max_seq:
+        raise ValueError(
+            f"need 1 <= min_seq <= max_seq, got {min_seq}, {max_seq}")
+
+    def source(start: int, count: int):
+        keys = _per_sample_keys(seed, start, count)
+        toks, labels = jax.vmap(
+            lambda k: lm_batch(k, 1, max_seq, vocab))(keys)
+        toks, labels = toks[:, 0], labels[:, 0]
+        lengths = jax.vmap(lambda k: jax.random.randint(
+            jax.random.fold_in(k, 1), (), min_seq, max_seq + 1))(keys)
+        mask = jnp.arange(max_seq)[None, :] < lengths[:, None]
+        return {"tokens": jnp.where(mask, toks, 0),
+                "labels": jnp.where(mask, labels, 0),
+                "length": lengths}
+
+    return source
+
+
 def _maybe_microbatched(stream: Iterator, accum_steps: int) -> Iterator:
     """Stack a global-batch stream to ``[K, B/K, ...]`` when K>1.
 

@@ -27,21 +27,24 @@ from repro.diagnostics.landscape import (direction_between,
                                          filter_normalized_direction,
                                          loss_slice_1d, loss_slice_2d)
 from repro.diagnostics.probes import (GradNoiseProbe, LanczosProbe,
-                                      Probe, SharpnessProbe, should_run)
+                                      Probe, SharpnessProbe, probe_due,
+                                      should_run)
 from repro.diagnostics.sharpness import gradient_noise_scale, sam_sharpness
-from repro.diagnostics.sink import (ConsoleSink, CsvSink, JsonlSink,
-                                    MemorySink, MetricsSink, MultiSink,
-                                    NullSink, export_recorder,
+from repro.diagnostics.sink import (BufferedSink, ConsoleSink, CsvSink,
+                                    JsonlSink, MemorySink, MetricsSink,
+                                    MultiSink, NullSink, export_recorder,
                                     validate_jsonl)
 
 __all__ = [
-    "ConsoleSink", "CsvSink", "FlatHVP", "GradNoiseProbe", "JsonlSink",
+    "BufferedSink", "ConsoleSink", "CsvSink", "FlatHVP",
+    "GradNoiseProbe", "JsonlSink",
     "LanczosProbe", "LanczosResult", "MemorySink", "MetricsSink",
     "MultiSink",
     "NullSink", "Probe", "SharpnessProbe", "direction_between",
     "export_recorder", "filter_normalized_direction",
     "gradient_noise_scale", "lanczos_top_k", "loss_slice_1d",
-    "loss_slice_2d", "make_flat_hvp", "padding_mask", "sam_sharpness",
+    "loss_slice_2d", "make_flat_hvp", "padding_mask", "probe_due",
+    "sam_sharpness",
     "scanned_grads", "scanned_loss", "should_run",
     "slq_spectral_density", "spectral_density", "spectral_density_stem",
     "top_k_eigenvalues", "tree_hvp", "validate_jsonl",

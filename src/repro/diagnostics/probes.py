@@ -7,6 +7,26 @@ sink=...)`` path invokes due probes after the optimizer step and
 streams their results (keys prefixed ``{name}/``) through the metrics
 sink alongside the per-step training metrics.
 
+Async dispatch: every concrete probe additionally splits ``__call__``
+into ``dispatch(step, state)`` — launch the jitted computation and
+return its *unmaterialized* device output (jax dispatch is
+asynchronous, so this never blocks the host) — and
+``resolve(raw) -> {metric: float}`` — the host-side conversion of
+that output (the only point that waits on the device).  The trainer's
+``fit(..., async_metrics=N)`` path dispatches probes at their
+scheduled step and resolves them N steps later through its bounded
+metric ring, so probe compute runs as a side computation behind the
+train steps while the host keeps dispatching; results still land in
+the sink under the step they *measured* (exact values, delayed
+materialization).  ``__call__`` remains
+``resolve(dispatch(step, state))`` — the synchronous path is
+unchanged.
+
+Scheduling: probes with a dynamic cadence expose ``due(step) ->
+bool``; :func:`probe_due` is the one scheduling predicate the trainer
+and launcher use — it consults ``due`` when present and falls back to
+the static ``step % every == 0`` rule.
+
 Probes are *separate* jitted computations over a held probe batch —
 they never touch (or recompile) the train step, so the fused
 optimizer's 2-``pallas_call`` launch invariant is untouched and their
@@ -57,6 +77,17 @@ def should_run(step: int, every: int) -> bool:
     return every > 0 and step % every == 0
 
 
+def probe_due(probe, step: int) -> bool:
+    """THE scheduling predicate for probes/callbacks: a probe with a
+    ``due(step)`` method (adaptive cadence — e.g. the batch
+    controller's drift-driven interval) decides itself; otherwise the
+    static ``step % every == 0`` rule applies."""
+    due = getattr(probe, "due", None)
+    if callable(due):
+        return bool(due(step))
+    return should_run(step, getattr(probe, "every", 1))
+
+
 def _host_floats(metrics: dict[str, jnp.ndarray]) -> dict[str, float]:
     return {k: float(v) for k, v in metrics.items()}
 
@@ -103,14 +134,23 @@ class LanczosProbe:
 
         return jax.jit(run)
 
-    def __call__(self, step: int, state) -> dict[str, float]:
+    def dispatch(self, step: int, state):
+        """Launch the probe computation; returns the unmaterialized
+        device eigenvalues (non-blocking)."""
         if self._fn is None:
             self._fn = self._build()
-        evals = jax.device_get(self._fn(state.params))
+        return self._fn(state.params)
+
+    def resolve(self, raw) -> dict[str, float]:
+        """Host conversion of a :meth:`dispatch` result (blocks)."""
+        evals = jax.device_get(raw)
         out = {"lambda_max": float(evals[0])}
         for j in range(1, self.top_k):
             out[f"eig_{j + 1}"] = float(evals[j])
         return out
+
+    def __call__(self, step: int, state) -> dict[str, float]:
+        return self.resolve(self.dispatch(step, state))
 
 
 @dataclasses.dataclass
@@ -127,13 +167,19 @@ class SharpnessProbe:
     _fn: Optional[Any] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
-    def __call__(self, step: int, state) -> dict[str, float]:
+    def dispatch(self, step: int, state):
         if self._fn is None:
             self._fn = jax.jit(lambda p: sharpness.sam_sharpness(
                 self.task, p, self.batch, rho=self.rho,
                 accum_steps=self.accum_steps, mesh=self.mesh,
                 data_axes=self.data_axes))
-        return _host_floats(jax.device_get(self._fn(state.params)))
+        return self._fn(state.params)
+
+    def resolve(self, raw) -> dict[str, float]:
+        return _host_floats(jax.device_get(raw))
+
+    def __call__(self, step: int, state) -> dict[str, float]:
+        return self.resolve(self.dispatch(step, state))
 
 
 @dataclasses.dataclass
@@ -163,10 +209,16 @@ class GradNoiseProbe:
                 "microbatches) or a mesh with data width >= 2; got "
                 f"accum_steps={self.accum_steps}, data_parallel={dp}")
 
-    def __call__(self, step: int, state) -> dict[str, float]:
+    def dispatch(self, step: int, state):
         if self._fn is None:
             self._fn = jax.jit(lambda p: sharpness.gradient_noise_scale(
                 self.task, p, self.batch,
                 accum_steps=self.accum_steps, mesh=self.mesh,
                 data_axes=self.data_axes))
-        return _host_floats(jax.device_get(self._fn(state.params)))
+        return self._fn(state.params)
+
+    def resolve(self, raw) -> dict[str, float]:
+        return _host_floats(jax.device_get(raw))
+
+    def __call__(self, step: int, state) -> dict[str, float]:
+        return self.resolve(self.dispatch(step, state))

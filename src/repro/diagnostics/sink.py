@@ -14,7 +14,12 @@ sink decides the representation:
   the Fig. 2 LNR traces;
 * :class:`MemorySink` — in-memory record list, for tests and the
   adaptive-batch controller's feedback assertions;
-* :class:`MultiSink` — fan-out to several sinks.
+* :class:`MultiSink` — fan-out to several sinks;
+* :class:`BufferedSink` — wraps any sink and moves its writes onto a
+  dedicated writer thread behind a bounded queue, so a per-record
+  ``flush()`` (JSONL) or csv encode never stalls the dispatch loop;
+  record order is preserved exactly (single FIFO consumer) and
+  ``close()`` drains the queue before closing the wrapped sink.
 
 :func:`export_recorder` streams a ``NormRecorder``'s per-step
 leaf-mean LWN/LGN/LNR through any sink, so benchmarks stop
@@ -26,6 +31,8 @@ import csv
 import json
 import numbers
 import os
+import queue
+import threading
 from typing import Any, Callable, Mapping, Optional
 
 import numpy as np
@@ -205,6 +212,79 @@ class MultiSink(MetricsSink):
     def close(self) -> None:
         for s in self.sinks:
             s.close()
+
+
+class BufferedSink(MetricsSink):
+    """Move a sink's writes onto a writer thread behind a bounded queue.
+
+    ``write`` enqueues ``(step, metrics, last)`` and returns
+    immediately; a single daemon thread drains the FIFO into the
+    wrapped sink, so the output is byte-identical to (and in the same
+    order as) writing the wrapped sink directly — only the *caller's*
+    stall is removed.  The queue is bounded (``capacity``): if the
+    writer falls behind, ``write`` blocks instead of buffering without
+    limit, so a slow disk applies backpressure rather than OOM.
+
+    The metrics mapping is shallow-copied at enqueue time — callers
+    may mutate or reuse their dict after ``write`` returns.  A writer
+    exception is captured and re-raised on the next ``write``/
+    ``flush``/``close`` (on the caller's thread, where it is
+    actionable).  ``close()`` drains everything already enqueued, joins
+    the thread, then closes the wrapped sink; it is idempotent.
+    """
+
+    _CLOSE = object()
+
+    def __init__(self, sink: MetricsSink, capacity: int = 1024):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.sink = sink
+        self._q: queue.Queue = queue.Queue(maxsize=capacity)
+        self._err: Optional[BaseException] = None
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._run, name="BufferedSink-writer", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is self._CLOSE:
+                    return
+                step, metrics, last = item
+                if self._err is None:
+                    self.sink.write(step, metrics, last=last)
+            except BaseException as e:   # surfaced on the caller thread
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _check(self) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def write(self, step: int, metrics: Metrics, *,
+              last: bool = False) -> None:
+        self._check()
+        if self._closed:
+            raise ValueError("write to a closed BufferedSink")
+        self._q.put((int(step), dict(metrics), bool(last)))
+
+    def flush(self) -> None:
+        """Block until every record enqueued so far has been written."""
+        self._q.join()
+        self._check()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(self._CLOSE)
+        self._thread.join()
+        self.sink.close()
+        self._check()
 
 
 def export_recorder(recorder, sink: MetricsSink, *,

@@ -75,7 +75,7 @@ from repro.training import tasks
 from repro.training.controller import (AdaptiveBatchController,
                                        ControllerConfig)
 from repro.training.train_state import TrainState, replicate
-from repro.training.trainer import make_train_step
+from repro.training.trainer import MetricRing, make_train_step
 
 
 def main() -> None:
@@ -153,7 +153,26 @@ def main() -> None:
                          "batch (default: 4x the starting global batch)")
     ap.add_argument("--controller-every", type=int, default=5,
                     help="adaptive-batch decision cadence in steps")
+    ap.add_argument("--prefetch", type=int, default=0, metavar="N",
+                    help="prefetch N batches on a background producer "
+                         "thread (0 = off; 2 = double buffering): batch "
+                         "generation + host->device transfer of step "
+                         "i+1 overlap the compute of step i (see "
+                         "data.pipeline.PrefetchingStream; composes "
+                         "with --adaptive-batch via its drain/refill "
+                         "retarget contract)")
+    ap.add_argument("--async-metrics", type=int, default=0, metavar="W",
+                    help="resolve per-step metrics W steps late through "
+                         "a bounded in-flight ring instead of blocking "
+                         "on every step's device values (0 = off; "
+                         "exact same numbers, delayed materialization), "
+                         "and buffer JSONL writes onto a writer thread "
+                         "(diagnostics.BufferedSink)")
     args = ap.parse_args()
+    if args.prefetch < 0 or args.async_metrics < 0:
+        raise SystemExit(f"--prefetch {args.prefetch} and "
+                         f"--async-metrics {args.async_metrics} must "
+                         f"be >= 0")
 
     mesh_data = args.mesh_data if args.mesh_data is not None \
         else args.data_parallel
@@ -319,6 +338,14 @@ def main() -> None:
 
             stream = pipeline.MicrobatchedStream(sample_src, microbatch,
                                                  accum_steps=accum_steps)
+            if args.prefetch > 0:
+                # batch generation moves to the producer thread; the
+                # controller's retargets drain/refill the buffer so
+                # switch-at-step-N stays sample-identical (placement is
+                # left to the controller's run step, which shards per
+                # current D)
+                stream = pipeline.PrefetchingStream(stream,
+                                                    size=args.prefetch)
             controller.attach(stream)
             step_fn = None
         elif mesh_native:
@@ -334,6 +361,34 @@ def main() -> None:
 
         es = extra_embed_shape(cfg, global_batch)
         batch_dim = 1 if accum_steps > 1 else 0
+        fixed_iter = None
+        if controller is None:
+            def fixed_batches():
+                for j in range(args.steps):
+                    toks, labels = lm_batch(jax.random.fold_in(rng, j),
+                                            global_batch, args.seq,
+                                            cfg.vocab_size)
+                    b = {"tokens": toks, "labels": labels}
+                    if es is not None:
+                        b["extra_embeds"] = jnp.zeros(es, cfg.cdtype)
+                    if accum_steps > 1:
+                        b = pipeline.stack_microbatches(b, accum_steps)
+                    yield b
+
+            if args.prefetch > 0:
+                place = (lambda b: pipeline.shard_batch(
+                    mesh, b, batch_dim=batch_dim)) if mesh.size > 1 \
+                    else pipeline.device_put_batch
+                fixed_iter = pipeline.PrefetchingStream(
+                    fixed_batches(), size=args.prefetch, place=place)
+            else:
+                def _placed():
+                    for b in fixed_batches():
+                        if mesh.size > 1:
+                            b = pipeline.shard_batch(mesh, b,
+                                                     batch_dim=batch_dim)
+                        yield b
+                fixed_iter = _placed()
         print(f"global_batch={global_batch} microbatch={microbatch} "
               f"accum_steps={accum_steps} "
               f"data_parallel={mesh_data if mesh_native else 1} "
@@ -346,6 +401,9 @@ def main() -> None:
             static["global_batch"] = global_batch
         sink = diag_sink.JsonlSink(args.metrics_out, static=static) \
             if args.metrics_out else None
+        if sink is not None and args.async_metrics > 0:
+            # JSONL formatting + fsync move off the step loop too
+            sink = diag_sink.BufferedSink(sink)
         probe = None
         if args.probe_every > 0:
             # held probe batch: fixed key, same [K, B/K, ...] stacking
@@ -367,7 +425,43 @@ def main() -> None:
                 mesh=mesh if mesh_native and controller is None else None,
                 reorth=not args.probe_no_reorth)
 
+        ring = MetricRing(args.async_metrics) \
+            if args.async_metrics > 0 else None
+
         t0 = time.time()
+
+        def emit_train(i, values, last, step_bs=None):
+            host = {k: float(v) for k, v in values.items()
+                    if np.ndim(v) == 0}
+            if step_bs is not None:
+                host["global_batch"] = float(step_bs)
+            if sink is not None:
+                sink.write(i, host, last=last)
+            if i % args.log_every == 0 or last:
+                print(f"step {i:4d} loss={host['loss']:.4f} "
+                      f"ce={host['ce']:.4f} "
+                      f"gnorm={host['grad_norm']:.3f} "
+                      f"({time.time()-t0:.1f}s)")
+
+        def emit_probe(i, out, _last):
+            if sink is not None:
+                sink.write(i, {f"{probe.name}/{k}": v
+                               for k, v in out.items()}, last=True)
+            print(f"step {i:4d} probe lambda_max="
+                  f"{out['lambda_max']:.4f}")
+
+        def emit_ctrl(i, out, _last):
+            if sink is not None:
+                sink.write(i, {f"{controller.name}/{k}": v
+                               for k, v in out.items()}, last=True)
+            print(f"step {i:4d} controller "
+                  f"B_noise={out['b_noise']:.1f} "
+                  f"global_batch={int(out['global_batch'])} "
+                  f"D={int(out.get('data_parallel', 1))} "
+                  f"K={int(out['accum_steps'])} "
+                  f"lr={out['lr']:.4f}"
+                  + (" [switched]" if out["changed"] else ""))
+
         for i in range(args.steps):
             if controller is not None:
                 # the batch pulled now trains at the CURRENT target;
@@ -376,50 +470,41 @@ def main() -> None:
                 batch = next(stream)
                 state, metrics = controller.step_fn()(state, batch)
             else:
-                toks, labels = lm_batch(jax.random.fold_in(rng, i),
-                                        global_batch, args.seq,
-                                        cfg.vocab_size)
-                batch = {"tokens": toks, "labels": labels}
-                if es is not None:
-                    batch["extra_embeds"] = jnp.zeros(es, cfg.cdtype)
-                if accum_steps > 1:
-                    batch = pipeline.stack_microbatches(batch, accum_steps)
-                if mesh.size > 1:
-                    batch = pipeline.shard_batch(mesh, batch,
-                                                 batch_dim=batch_dim)
-                state, metrics = step_fn(state, batch)
+                step_batch_size = None
+                state, metrics = step_fn(state, next(fixed_iter))
             last = i == args.steps - 1
-            host = {k: float(v) for k, v in metrics.items()
-                    if jnp.ndim(v) == 0}
-            if controller is not None:
-                host["global_batch"] = float(step_batch_size)
-            if sink is not None:
-                sink.write(i, host, last=last)
-            if i % args.log_every == 0 or last:
-                print(f"step {i:4d} loss={host['loss']:.4f} "
-                      f"ce={host['ce']:.4f} "
-                      f"gnorm={host['grad_norm']:.3f} "
-                      f"({time.time()-t0:.1f}s)")
-            if probe is not None and probes.should_run(i, probe.every):
-                out = probe(i, state)
-                if sink is not None:
-                    sink.write(i, {f"{probe.name}/{k}": v
-                                   for k, v in out.items()}, last=True)
-                print(f"step {i:4d} probe lambda_max="
-                      f"{out['lambda_max']:.4f}")
-            if controller is not None and \
-                    probes.should_run(i, controller.every):
+            if ring is None:
+                emit_train(i, jax.device_get(metrics), last,
+                           step_batch_size)
+            else:
+                # leave the values on device; the ring materializes
+                # them `async_metrics` steps later (exact same numbers)
+                ring.append(i, metrics,
+                            lambda s, v, l, _b=step_batch_size:
+                            emit_train(s, v, l, _b), last=last)
+            if probe is not None and probes.probe_due(probe, i):
+                if ring is None:
+                    emit_probe(i, probe(i, state), True)
+                else:
+                    ring.append(i, probe.dispatch(i, state),
+                                lambda s, v, l:
+                                emit_probe(s, probe.resolve(v), l))
+            if controller is not None and probes.probe_due(controller, i):
+                # the decision must land before the next pull, so the
+                # controller call itself stays synchronous; its output
+                # rides the ring only to keep sink records ordered
                 out = controller(i, state)
-                if sink is not None:
-                    sink.write(i, {f"{controller.name}/{k}": v
-                                   for k, v in out.items()}, last=True)
-                print(f"step {i:4d} controller "
-                      f"B_noise={out['b_noise']:.1f} "
-                      f"global_batch={int(out['global_batch'])} "
-                      f"D={int(out.get('data_parallel', 1))} "
-                      f"K={int(out['accum_steps'])} "
-                      f"lr={out['lr']:.4f}"
-                      + (" [switched]" if out["changed"] else ""))
+                if ring is None:
+                    emit_ctrl(i, out, True)
+                else:
+                    ring.append(i, out,
+                                lambda s, v, l: emit_ctrl(s, v, l))
+        if ring is not None:
+            ring.drain()
+        if isinstance(stream, pipeline.PrefetchingStream):
+            stream.close()
+        if isinstance(fixed_iter, pipeline.PrefetchingStream):
+            fixed_iter.close()
         if sink is not None:
             sink.close()
             print(f"metrics -> {args.metrics_out}")

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -59,8 +60,10 @@ from jax.sharding import Mesh
 from repro.core import schedules
 from repro.core.base import GradientTransform
 from repro.data import pipeline
+from repro.diagnostics.probes import should_run
 
 SNAP_MODES = ("pow2", "linear")
+CADENCE_MODES = ("static", "adaptive")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +75,27 @@ class ControllerConfig:
     ``batch_min/max``  global-batch clamp (inclusive); both must be
                      K·microbatch-representable under ``snap``.
     ``every``        decision cadence in global steps (probe boundary).
+                     Under ``cadence="adaptive"`` this becomes the
+                     CEILING on the interval between boundaries.
+    ``cadence``      "static" (boundary at every ``every``-th step —
+                     the legacy schedule) or "adaptive": the interval
+                     between boundaries is driven by measured probe
+                     cost vs. ``b_noise_ema`` drift — it halves (down
+                     to ``min_every``, or the cost floor below) while
+                     the smoothed noise scale moves more than
+                     ``drift_threshold`` relatively between
+                     boundaries, and doubles back up to ``every`` when
+                     it is stable, so a drifting B_noise is tracked
+                     closely and a settled one stops paying for
+                     probes.  The cost floor keeps measured probe
+                     wall-time under ``probe_budget`` of train
+                     wall-time: interval >= probe_cost /
+                     (probe_budget × per-step time).
+    ``min_every``    adaptive floor on the interval (>= 1).
+    ``drift_threshold``  relative ``b_noise_ema`` change between
+                     boundaries counted as drift.
+    ``probe_budget`` ceiling on probe-seconds per train-second
+                     (0 < budget <= 1).
     ``deadband``     relative hold band: a candidate batch within
                      ``±deadband × current`` of the current batch is
                      ignored — the no-op (zero-recompile) regime.
@@ -91,8 +115,25 @@ class ControllerConfig:
     ema: float = 0.5
     snap: str = "pow2"
     data_max: int = 1
+    cadence: str = "static"
+    min_every: int = 1
+    drift_threshold: float = 0.25
+    probe_budget: float = 0.1
 
     def __post_init__(self):
+        if self.cadence not in CADENCE_MODES:
+            raise ValueError(
+                f"cadence={self.cadence!r}; one of {CADENCE_MODES}")
+        if not 1 <= self.min_every <= self.every:
+            raise ValueError(
+                f"min_every={self.min_every} must be in "
+                f"[1, every={self.every}]")
+        if self.drift_threshold < 0.0:
+            raise ValueError(f"drift_threshold must be >= 0, "
+                             f"got {self.drift_threshold}")
+        if not 0.0 < self.probe_budget <= 1.0:
+            raise ValueError(f"probe_budget must be in (0, 1], "
+                             f"got {self.probe_budget}")
         if self.microbatch < 1:
             raise ValueError(f"microbatch must be >= 1, "
                              f"got {self.microbatch}")
@@ -273,13 +314,33 @@ class AdaptiveBatchController:
                  base_lr: float = 1.0, base_batch_size: int = 256,
                  scaling_rule: str = "sqrt",
                  lr_fn: Optional[Callable[[], float]] = None,
-                 donate: bool = False):
+                 donate: bool = False,
+                 probe_lead: int = 0):
+        if probe_lead < 0:
+            raise ValueError(f"probe_lead must be >= 0, got {probe_lead}")
         self.config = config
         self.every = config.every
         self._make_step = make_step
         self._optimizer_factory = optimizer_factory
         self.noise_probe = noise_probe
         self._donate = donate
+        # side-stream probing: with probe_lead = L > 0 (and a probe
+        # exposing dispatch/resolve) the GNS computation is launched L
+        # steps BEFORE the decision boundary, so by the time the
+        # decision needs the value the device has usually finished it
+        # — block_until_ready happens only at the boundary, and rarely
+        # actually blocks.  The measurement is then of the state L
+        # steps before the boundary; L=0 keeps the exact synchronous
+        # semantics.
+        self.probe_lead = int(probe_lead)
+        self._pending: Optional[tuple[int, Any, float]] = None
+        # adaptive cadence state: interval in [min_every|cost floor,
+        # every], next boundary step, last boundary (step, wall time),
+        # EMA of measured probe seconds
+        self._interval = config.every
+        self._next_due = 0
+        self._last_boundary: Optional[tuple[int, float]] = None
+        self._probe_seconds: Optional[float] = None
         self._mesh_factory = mesh_factory or _default_mesh_factory
         init_batch = config.batch_min if init_batch is None else init_batch
         if init_data_parallel is None:
@@ -451,6 +512,95 @@ class AdaptiveBatchController:
         if hasattr(stream, "set_data_parallel"):
             stream.set_data_parallel(self._dp)
 
+    # ------------------------------------------------------- scheduling
+    @property
+    def probe_interval(self) -> int:
+        """Current steps-between-boundaries (== ``every`` when
+        static)."""
+        return self._interval if self.config.cadence == "adaptive" \
+            else self.every
+
+    def due(self, step: int) -> bool:
+        """The boundary schedule consulted by ``fit`` (via
+        ``probes.probe_due``): the legacy ``step % every == 0`` rule
+        under static cadence, the drift/cost-driven ``_next_due``
+        under adaptive cadence."""
+        if self.config.cadence == "static":
+            return should_run(step, self.every)
+        return step >= self._next_due
+
+    def _boundary_after(self, step: int) -> int:
+        """The first decision-boundary step strictly after ``step``."""
+        if self.config.cadence == "static":
+            return (step // self.every + 1) * self.every
+        return max(self._next_due, step + 1)
+
+    def prepare(self, step: int, state) -> None:
+        """Per-step hook (called by ``fit`` every step): with
+        ``probe_lead > 0`` and a dispatchable probe, launch the GNS
+        computation ``probe_lead`` steps ahead of the next boundary so
+        the decision there finds it already finished."""
+        if self.probe_lead <= 0 or self._pending is not None:
+            return
+        if not hasattr(self.noise_probe, "dispatch"):
+            return
+        if self.due(step):
+            return   # __call__ will dispatch (and resolve) right now
+        nxt = self._boundary_after(step)
+        if step + self.probe_lead >= nxt:
+            self._pending = (step, self.noise_probe.dispatch(step, state),
+                             time.perf_counter())
+
+    def _measure(self, step: int, state) -> tuple[float, float]:
+        """B_noise at the boundary: resolve the pre-dispatched probe
+        (blocking only for whatever the device has not finished) or
+        run it synchronously.  Returns (value, probe_seconds)."""
+        t0 = time.perf_counter()
+        if self._pending is not None:
+            _, raw, t_disp = self._pending
+            self._pending = None
+            jax.block_until_ready(raw)
+            out = self.noise_probe.resolve(raw)
+            # dispatch->ready upper-bounds the probe's device cost
+            seconds = time.perf_counter() - t_disp
+        else:
+            out = self.noise_probe(step, state)
+            seconds = time.perf_counter() - t0
+        return float(out["grad_noise_scale"]), seconds
+
+    def _update_cadence(self, step: int, prev_ema: Optional[float],
+                        probe_seconds: float) -> None:
+        """Adaptive interval law (no-op under static cadence): halve
+        while b_noise_ema drifts faster than ``drift_threshold``
+        between boundaries, double back toward the ``every`` ceiling
+        when stable; the measured-probe-cost floor keeps probe
+        wall-time under ``probe_budget`` of train wall-time."""
+        cfg = self.config
+        self._probe_seconds = probe_seconds \
+            if self._probe_seconds is None \
+            else 0.5 * self._probe_seconds + 0.5 * probe_seconds
+        if cfg.cadence != "adaptive":
+            return
+        now = time.perf_counter()
+        floor = cfg.min_every
+        if self._last_boundary is not None:
+            lb_step, lb_t = self._last_boundary
+            per_step = (now - lb_t) / max(step - lb_step, 1)
+            if per_step > 0.0 and self._probe_seconds is not None:
+                floor = max(floor, math.ceil(
+                    self._probe_seconds / (cfg.probe_budget * per_step)))
+        self._last_boundary = (step, now)
+        drifting = True   # first boundary: no previous EMA -> track
+        if prev_ema is not None and self._b_ema is not None:
+            drifting = abs(self._b_ema - prev_ema) \
+                > cfg.drift_threshold * abs(prev_ema)
+        if drifting:
+            self._interval = max(self._interval // 2, 1)
+        else:
+            self._interval = self._interval * 2
+        self._interval = int(min(max(self._interval, floor), cfg.every))
+        self._next_due = step + self._interval
+
     # -------------------------------------------------------- decisions
     def retarget(self, global_batch: int,
                  data_parallel: Optional[int] = None) -> bool:
@@ -483,9 +633,12 @@ class AdaptiveBatchController:
         return True
 
     def __call__(self, step: int, state) -> dict[str, float]:
-        """Probe boundary: measure B_noise, decide, apply; returns the
-        ``controller/*`` metrics for the sink."""
-        measured = float(self.noise_probe(step, state)["grad_noise_scale"])
+        """Probe boundary: measure B_noise (resolving a pre-dispatched
+        side-stream probe when one is in flight — the ONLY
+        block_until_ready on the controller path), decide, apply;
+        returns the ``controller/*`` metrics for the sink."""
+        prev_ema = self._b_ema
+        measured, probe_seconds = self._measure(step, state)
         # a non-finite / non-positive reading (noise-dominated ‖G‖²
         # estimate) carries no information: keep it OUT of the EMA —
         # folding it in would poison the smoothed estimate and freeze
@@ -506,9 +659,12 @@ class AdaptiveBatchController:
             cached = (d, k) in self._jit_steps
             changed = self.retarget(d * k * self.config.microbatch,
                                     data_parallel=d)
+        self._update_cadence(step, prev_ema, probe_seconds)
         return {"b_noise": measured, "b_noise_ema": smoothed,
                 "global_batch": float(self.global_batch),
                 "accum_steps": float(self._k),
                 "data_parallel": float(self._dp),
                 "lr": self.lr, "changed": float(changed),
-                "step_cached": float(cached)}
+                "step_cached": float(cached),
+                "probe_interval": float(self.probe_interval),
+                "probe_seconds": float(probe_seconds)}

@@ -45,10 +45,12 @@ global batch. ``fit`` optionally records the full per-layer traces.
 """
 from __future__ import annotations
 
+import collections
 from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -245,6 +247,62 @@ def make_ssl_step(embed_fn: Callable, optimizer: GradientTransform, *,
         accum_steps=accum_steps, mesh=mesh, record_norms=record_norms)
 
 
+class MetricRing:
+    """Bounded ring of in-flight device metric futures.
+
+    The host/device overlap primitive behind ``fit(...,
+    async_metrics=N)`` (and the launcher's ``--async-metrics``): the
+    dispatch loop ``append``s each step's *unmaterialized* device
+    metrics (jax dispatch is asynchronous — holding the arrays costs
+    nothing), and only once more than ``window`` entries are in flight
+    is the oldest resolved — one ``jax.device_get``, the single point
+    that waits on the device — and handed to its ``emit(step, host,
+    last)`` callback.  The loop therefore runs up to ``window`` steps
+    ahead of materialization, while the ring still bounds in-flight
+    depth (an unbounded run-ahead would queue arbitrarily many device
+    computations and buffers).
+
+    Values are EXACT: the same arrays the synchronous path would have
+    converted, materialized late.  Emission order is exactly append
+    order, so interleaved train/probe/recorder records resolve in the
+    same sequence the synchronous loop would have produced.  ``drain``
+    resolves everything still in flight (end of run).
+    """
+
+    def __init__(self, window: int):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.window = int(window)
+        self._ring: collections.deque = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def append(self, step: int, values, emit: Callable, *,
+               last: bool = False) -> None:
+        """Enqueue device ``values``; resolves the oldest entries down
+        to ``window`` in flight (FIFO, so order is preserved)."""
+        self._ring.append((step, values, emit, last))
+        while len(self._ring) > self.window:
+            self._pop()
+
+    def _pop(self) -> None:
+        step, values, emit, last = self._ring.popleft()
+        emit(step, jax.device_get(values), last)
+
+    def drain(self) -> None:
+        """Resolve every in-flight entry (the end-of-run barrier)."""
+        while self._ring:
+            self._pop()
+
+
+def _to_host_scalars(metrics) -> dict:
+    """Materialized metrics tree -> {key: float|array} exactly as the
+    synchronous path converts them (floats for 0-d, arrays verbatim)."""
+    return {k: float(v) if np.ndim(v) == 0 else v
+            for k, v in metrics.items()}
+
+
 def fit(train_step: Optional[Callable], state: TrainState, batches,
         num_steps: int,
         *, recorder: Optional[instrumentation.NormRecorder] = None,
@@ -252,7 +310,9 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
         donate: Optional[bool] = None,
         sink: Optional["sinks.MetricsSink"] = None,
         callbacks: Sequence = (),
-        controller=None) -> tuple[TrainState, list[dict]]:
+        controller=None,
+        async_metrics: Union[bool, int] = False,
+        close_sink: bool = False) -> tuple[TrainState, list[dict]]:
     """Host loop used by CPU-scale experiments. ``batches`` yields one
     pytree per *global* step: dict batches (LM) or tuples
     (classifier/SSL args); for an accumulating step the leaves carry the
@@ -286,7 +346,29 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
     ``controller/*`` metrics, and its K switches take effect at the
     next batch pull — the re-stack boundary between jitted segments.
     ``donate`` is governed by the controller's own ``donate=`` flag in
-    this mode."""
+    this mode.
+
+    ``async_metrics`` makes the host loop non-blocking: instead of the
+    per-step ``float()``/``jax.device_get`` (which stalls the dispatch
+    loop until the device finishes the step), each step's device
+    metrics enter a bounded :class:`MetricRing` and materialize
+    ``window`` steps late — ``True`` picks ``max(log_every, 1)`` (or 8
+    when ``log_every`` is 0), an int sets the window explicitly.
+    Values are exact (same arrays, delayed materialization), history
+    and sink records keep their order and step keys, and probes with a
+    ``dispatch``/``resolve`` split are dispatched at their scheduled
+    step and resolved through the same ring, so probe compute overlaps
+    subsequent train steps instead of blocking at the probe boundary.
+    Delayed metrics are safe whenever nothing on the host consumes a
+    step's metric values before ``window`` later steps have been
+    dispatched — the adaptive controller is the exception (its decision
+    changes the next batch), so it keeps its synchronous boundary and
+    only its probe dispatch overlaps.
+
+    ``close_sink=True`` closes ``sink`` after the final write (the
+    default-constructed console sink is always closed); leave False
+    when the caller owns the sink (e.g. a ``with JsonlSink(...)``
+    block or a sink reused across fits)."""
     if controller is not None:
         if train_step is not None:
             raise ValueError(
@@ -303,39 +385,90 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
     if sink is None:
         sink = sinks.ConsoleSink(every=log_every, log_fn=log_fn) \
             if log_every else None
+        close_sink = close_sink or sink is not None
+    if async_metrics is True:
+        async_metrics = max(log_every, 1) if log_every else 8
+    ring = MetricRing(int(async_metrics)) if async_metrics else None
     history: list[dict] = []
-    for i in range(num_steps):
-        # read the target BEFORE the pull: controller retargets land at
-        # the next pull, so this is the batch this step trains at
-        step_batch_size = controller.global_batch \
-            if controller is not None else None
-        batch = next(batches)
-        fn = controller.step_fn() if controller is not None else step_fn
-        if isinstance(batch, dict):
-            state, metrics = fn(state, batch)
-        else:
-            state, metrics = fn(state, *batch)
-        ln = metrics.pop("layer_norms", None)
-        if recorder is not None and ln is not None:
-            recorder.record(i, ln)
-        # scalars -> python floats; non-scalar task metrics (e.g.
-        # per-class vectors) come back as host numpy arrays
-        host = {k: float(v) if jnp.ndim(v) == 0 else jax.device_get(v)
-                for k, v in metrics.items()}
+
+    def emit_train(step, host_metrics, last, step_batch_size=None):
+        host = _to_host_scalars(host_metrics)
         if step_batch_size is not None:
             # adaptive runs: every record carries the batch it trained
             # at (the static sink field would go stale across switches)
             host["global_batch"] = float(step_batch_size)
         history.append(host)
-        last = i == num_steps - 1
         if sink is not None:
-            sink.write(i, host, last=last)
-        for probe in callbacks:
-            if probes_lib.should_run(i, getattr(probe, "every", 1)):
-                out = probe(i, state)
-                if out and sink is not None:
-                    # probe lines always flush (last=True beats the
-                    # console sink's every-N gate)
-                    sink.write(i, {f"{probe.name}/{k}": v
-                                   for k, v in out.items()}, last=True)
+            sink.write(step, host, last=last)
+
+    def emit_probe(step, out, last, probe=None):
+        if out and sink is not None:
+            # probe lines always flush (last=True beats the console
+            # sink's every-N gate)
+            sink.write(step, {f"{probe.name}/{k}": v
+                              for k, v in out.items()}, last=True)
+
+    try:
+        for i in range(num_steps):
+            # read the target BEFORE the pull: controller retargets
+            # land at the next pull, so this is the batch this step
+            # trains at
+            step_batch_size = controller.global_batch \
+                if controller is not None else None
+            batch = next(batches)
+            fn = controller.step_fn() if controller is not None \
+                else step_fn
+            if isinstance(batch, dict):
+                state, metrics = fn(state, batch)
+            else:
+                state, metrics = fn(state, *batch)
+            ln = metrics.pop("layer_norms", None)
+            last = i == num_steps - 1
+            if ring is None:
+                if recorder is not None and ln is not None:
+                    recorder.record(i, ln)
+                # scalars -> python floats; non-scalar task metrics
+                # (e.g. per-class vectors) as host numpy arrays
+                emit_train(i, jax.device_get(metrics), last,
+                           step_batch_size)
+            else:
+                if recorder is not None and ln is not None:
+                    ring.append(
+                        i, ln,
+                        lambda s, v, _l: recorder.record(s, v))
+                ring.append(
+                    i, metrics,
+                    lambda s, v, l, _b=step_batch_size:
+                        emit_train(s, v, l, _b),
+                    last=last)
+            for probe in callbacks:
+                prepare = getattr(probe, "prepare", None)
+                if prepare is not None:
+                    # side-stream pre-dispatch hook (e.g. the adaptive
+                    # controller launching its noise probe early)
+                    prepare(i, state)
+                if not probes_lib.probe_due(probe, i):
+                    continue
+                if ring is not None and hasattr(probe, "dispatch") \
+                        and hasattr(probe, "resolve") \
+                        and probe is not controller:
+                    raw = probe.dispatch(i, state)
+                    ring.append(i, raw,
+                                lambda s, v, l, _p=probe:
+                                    emit_probe(s, _p.resolve(v), l, _p))
+                else:
+                    out = probe(i, state)
+                    if ring is None:
+                        emit_probe(i, out, True, probe)
+                    else:
+                        # already-host values ride the ring so records
+                        # keep the synchronous path's exact order
+                        ring.append(i, out,
+                                    lambda s, v, l, _p=probe:
+                                        emit_probe(s, v, l, _p))
+        if ring is not None:
+            ring.drain()
+    finally:
+        if close_sink and sink is not None:
+            sink.close()
     return state, history

@@ -1,0 +1,565 @@
+"""Async host/device overlap subsystem: delayed-metrics parity,
+probe dispatch/resolve scheduling, ``BufferedSink`` byte-identity,
+``PrefetchingStream`` sample-identity (including mid-stream retargets
+under the adaptive controller), LM length bucketing, and the
+controller's adaptive probe cadence.
+
+The headline contracts:
+
+* ``fit(..., async_metrics=N)`` emits BIT-IDENTICAL values to the
+  synchronous loop — same history, same sink records, same step keys —
+  just materialized later;
+* ``BufferedSink`` output is byte-identical to (and ordered exactly
+  as) writing the wrapped sink directly;
+* a ``PrefetchingStream`` yields exactly the wrapped stream's samples,
+  and a ``set_accum_steps``/``set_data_parallel`` switch at step N is
+  sample-identical to retargeting the unprefetched stream at step N
+  (the drain/refill contract).
+"""
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_optimizer
+from repro.core.instrumentation import NormRecorder
+from repro.data.pipeline import (LengthBucketedStream, MicrobatchedStream,
+                                 PrefetchingStream, device_put_batch)
+from repro.data.synthetic import (ClassificationData, batch_iterator,
+                                  classification_sample_source,
+                                  lm_varlen_sample_source)
+from repro.diagnostics import BufferedSink, probe_due
+from repro.diagnostics import sink as sink_lib
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+from repro.training import (AdaptiveBatchController, ControllerConfig,
+                            TrainState, classifier_task, fit)
+from repro.training.trainer import MetricRing, make_train_step
+
+pytestmark = pytest.mark.overlap
+
+DATA = ClassificationData(num_classes=4, image_size=8, seed=0)
+TASK = classifier_task(apply_mlp_classifier)
+BASE_LR = 0.4
+BASE_BATCH = 256
+
+
+def _params():
+    return init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                               num_classes=4, hidden=16)
+
+
+def _opt(batch=16, use_kernel=False):
+    return build_optimizer("tvlars", total_steps=50,
+                           learning_rate=BASE_LR, batch_size=batch,
+                           base_batch_size=BASE_BATCH,
+                           use_kernel=use_kernel)
+
+
+class _SquareProbe:
+    """Minimal dispatch/resolve probe: sum of squared params."""
+    name = "sq"
+    every = 3
+
+    def __init__(self):
+        self.dispatched: list[int] = []
+        self._fn = jax.jit(lambda p: sum(
+            jnp.vdot(x, x).real for x in jax.tree_util.tree_leaves(p)))
+
+    def dispatch(self, step, state):
+        self.dispatched.append(step)
+        return self._fn(state.params)
+
+    def resolve(self, raw):
+        return {"param_sq": float(jax.device_get(raw))}
+
+    def __call__(self, step, state):
+        return self.resolve(self.dispatch(step, state))
+
+
+# ------------------------------------------------------------ MetricRing
+def test_metric_ring_window_and_fifo_order():
+    ring = MetricRing(3)
+    got = []
+    for i in range(5):
+        ring.append(i, jnp.asarray(float(i)),
+                    lambda s, v, l: got.append((s, float(v), l)),
+                    last=i == 4)
+    # window=3: entries 0 and 1 already resolved, in append order
+    assert [g[0] for g in got] == [0, 1]
+    ring.drain()
+    assert [g[0] for g in got] == [0, 1, 2, 3, 4]
+    assert got[-1][2] is True and got[0][2] is False
+    assert [g[1] for g in got] == [0.0, 1.0, 2.0, 3.0, 4.0]
+    assert len(ring) == 0
+
+
+def test_metric_ring_validates_window():
+    with pytest.raises(ValueError, match="window"):
+        MetricRing(0)
+
+
+# -------------------------------------------------- async fit bit-parity
+def _fit_once(async_metrics, probe, steps=10, record_norms=False):
+    opt = _opt()
+    step = make_train_step(TASK, opt, record_norms=record_norms)
+    params = _params()
+    state = TrainState.create(params, opt)
+    sink = sink_lib.MemorySink()
+    rec = NormRecorder(params) if record_norms else None
+    state, hist = fit(step, state, batch_iterator(DATA, 16), steps,
+                      sink=sink, callbacks=[probe] if probe else [],
+                      async_metrics=async_metrics, recorder=rec)
+    return state, hist, sink, rec
+
+
+def test_async_fit_bit_identical_to_sync():
+    s_state, s_hist, s_sink, _ = _fit_once(False, _SquareProbe())
+    a_state, a_hist, a_sink, _ = _fit_once(5, _SquareProbe())
+    assert len(s_hist) == len(a_hist) == 10
+    for hs, ha in zip(s_hist, a_hist):
+        assert hs.keys() == ha.keys()
+        for k in hs:
+            # bit-identical: the ring materializes the SAME arrays
+            assert np.array_equal(np.asarray(hs[k]), np.asarray(ha[k])), k
+    assert s_sink.records == a_sink.records
+    for pa, pb in zip(jax.tree_util.tree_leaves(s_state.params),
+                      jax.tree_util.tree_leaves(a_state.params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def test_async_fit_probe_records_at_dispatch_step():
+    probe = _SquareProbe()
+    _, _, sink, _ = _fit_once(4, probe, steps=10)
+    # probe results land under the step they MEASURED, not the step
+    # they materialized at
+    assert probe.dispatched == [0, 3, 6, 9]
+    assert [s for s, _ in sink.by_key("sq/param_sq")] == [0, 3, 6, 9]
+    # train + probe records stay in the synchronous path's order
+    steps_seq = [r["step"] for r in sink.records]
+    assert steps_seq == sorted(steps_seq)
+
+
+def test_async_fit_recorder_parity():
+    _, _, _, s_rec = _fit_once(False, None, steps=6, record_norms=True)
+    _, _, _, a_rec = _fit_once(3, None, steps=6, record_norms=True)
+    assert s_rec.steps == a_rec.steps == list(range(6))
+    sa, aa = s_rec.as_arrays(), a_rec.as_arrays()
+    for k in ("lwn", "lgn", "lnr"):
+        np.testing.assert_array_equal(sa[k], aa[k])
+
+
+def test_async_true_picks_window_and_validates():
+    # async_metrics=True resolves to a positive default window; a bad
+    # explicit window raises in MetricRing
+    _, hist, _, _ = _fit_once(True, None, steps=4)
+    assert len(hist) == 4
+    with pytest.raises(ValueError, match="window"):
+        _fit_once(-1, None, steps=2)
+
+
+# ----------------------------------------------------------- BufferedSink
+def _write_stream(sink):
+    sink.write(0, {"loss": 1.5, "acc": 0.25})
+    sink.write(1, {"loss": float("nan"), "acc": 0.5})   # -> null
+    sink.write(1, {"probe/x": 2.0}, last=True)
+    for i in range(2, 40):
+        sink.write(i, {"loss": 1.0 / i}, last=i == 39)
+
+
+def test_buffered_sink_byte_identical(tmp_path):
+    direct, buffered = tmp_path / "direct.jsonl", tmp_path / "buf.jsonl"
+    with sink_lib.JsonlSink(str(direct), static={"run": "t"}) as s:
+        _write_stream(s)
+    buf = BufferedSink(sink_lib.JsonlSink(str(buffered),
+                                          static={"run": "t"}),
+                       capacity=4)   # small queue: exercise backpressure
+    _write_stream(buf)
+    buf.close()
+    assert direct.read_bytes() == buffered.read_bytes()
+    assert sink_lib.validate_jsonl(str(buffered)) == 41
+
+
+def test_buffered_sink_order_preserved():
+    inner = sink_lib.MemorySink()
+    buf = BufferedSink(inner, capacity=8)
+    for i in range(500):
+        buf.write(i, {"v": i})
+    buf.flush()
+    assert [r["step"] for r in inner.records] == list(range(500))
+    buf.close()
+
+
+def test_buffered_sink_error_surfaces_on_caller():
+    class Boom(sink_lib.MetricsSink):
+        def write(self, step, metrics, *, last=False):
+            raise RuntimeError("disk on fire")
+
+    buf = BufferedSink(Boom())
+    buf.write(0, {"v": 1.0})
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        buf.flush()
+    buf.close()
+
+
+def test_buffered_sink_close_is_idempotent_and_final():
+    inner = sink_lib.MemorySink()
+    buf = BufferedSink(inner)
+    buf.write(0, {"v": 1.0})
+    buf.close()
+    buf.close()
+    assert [r["step"] for r in inner.records] == [0]
+    with pytest.raises(ValueError, match="closed"):
+        buf.write(1, {"v": 2.0})
+    with pytest.raises(ValueError, match="capacity"):
+        BufferedSink(inner, capacity=0)
+
+
+def test_multisink_close_fans_out_and_context_manager():
+    class Closeable(sink_lib.MemorySink):
+        closed = False
+
+        def close(self):
+            self.closed = True
+
+    a, b = Closeable(), Closeable()
+    with sink_lib.MultiSink(a, b) as multi:
+        multi.write(0, {"v": 1.0})
+    assert a.closed and b.closed
+    assert a.records == b.records != []
+
+
+def test_fit_close_sink_flag():
+    class Closeable(sink_lib.MemorySink):
+        closed = False
+
+        def close(self):
+            self.closed = True
+
+    opt = _opt()
+    step = make_train_step(TASK, opt)
+    for flag in (False, True):
+        sink = Closeable()
+        fit(step, TrainState.create(_params(), opt),
+            batch_iterator(DATA, 16), 2, sink=sink, close_sink=flag)
+        assert sink.closed is flag
+
+
+# ------------------------------------------------------ PrefetchingStream
+SRC = classification_sample_source(DATA)
+
+
+def test_prefetch_sample_identity():
+    plain = MicrobatchedStream(SRC, microbatch=8, accum_steps=2)
+    with PrefetchingStream(MicrobatchedStream(SRC, microbatch=8,
+                                              accum_steps=2),
+                           place=device_put_batch) as pre:
+        assert (pre.microbatch, pre.accum_steps, pre.global_batch) \
+            == (8, 2, 16)
+        for _ in range(6):
+            (xa, ya), (xb, yb) = next(plain), next(pre)
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+            np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+        # producer runs ahead of the consumer, never behind
+        assert pre.position >= plain.position
+
+
+@pytest.mark.parametrize("retarget", ["accum", "data_parallel"])
+def test_prefetch_switch_at_step_n_sample_identical(retarget):
+    plain = MicrobatchedStream(SRC, microbatch=4, accum_steps=1)
+    pre = PrefetchingStream(MicrobatchedStream(SRC, microbatch=4,
+                                               accum_steps=1), size=3)
+    for i in range(12):
+        if i == 5:   # the switch-at-step-N contract: drain + rewind
+            if retarget == "accum":
+                plain.set_accum_steps(4)
+                pre.set_accum_steps(4)
+            else:
+                plain.set_data_parallel(2)
+                pre.set_data_parallel(2)
+        if i == 9:   # no-op retarget must not drain, then a real one
+            pre.set_accum_steps(pre.accum_steps)
+            plain.set_accum_steps(1)
+            pre.set_accum_steps(1)
+        (xa, ya), (xb, yb) = next(plain), next(pre)
+        assert xa.shape == xb.shape
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+        np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+    pre.close()
+
+
+def test_prefetch_finite_stream_and_errors():
+    with PrefetchingStream(iter(range(3))) as pre:
+        assert list(pre) == [0, 1, 2]
+        with pytest.raises(StopIteration):
+            next(pre)
+
+    def boom():
+        yield 1
+        raise RuntimeError("producer died")
+
+    pre = PrefetchingStream(boom(), size=1)
+    assert next(pre) == 1
+    with pytest.raises(RuntimeError, match="producer died"):
+        next(pre)
+    pre.close()
+    with pytest.raises(ValueError, match="size"):
+        PrefetchingStream(iter(()), size=0)
+
+
+def test_prefetch_under_adaptive_controller_fit():
+    """End to end: controller-driven retargets through a prefetching
+    stream produce the same training run as the unprefetched stream."""
+    def run(prefetch):
+        cfg = ControllerConfig(microbatch=4, batch_min=4, batch_max=32,
+                               every=2, ema=0.0)
+        ctrl = AdaptiveBatchController(
+            lambda opt, k: make_train_step(TASK, opt, accum_steps=k),
+            lambda b: _opt(batch=b),
+            lambda step, state: {"grad_noise_scale": 1e9},   # -> max
+            cfg, init_batch=4, base_lr=BASE_LR,
+            base_batch_size=BASE_BATCH)
+        stream = MicrobatchedStream(SRC, microbatch=4, accum_steps=1)
+        if prefetch:
+            stream = PrefetchingStream(stream, size=2)
+        state = TrainState.create(_params(), ctrl.optimizer())
+        sink = sink_lib.MemorySink()
+        state, hist = fit(None, state, stream, 8, sink=sink,
+                          controller=ctrl)
+        if prefetch:
+            stream.close()
+        return state, hist, sink
+
+    s_state, s_hist, s_sink = run(False)
+    p_state, p_hist, p_sink = run(True)
+    assert [h["loss"] for h in s_hist] == [h["loss"] for h in p_hist]
+    assert [h["global_batch"] for h in s_hist] == \
+        [h["global_batch"] for h in p_hist]
+    assert s_sink.by_key("controller/global_batch") == \
+        p_sink.by_key("controller/global_batch")
+    for pa, pb in zip(jax.tree_util.tree_leaves(s_state.params),
+                      jax.tree_util.tree_leaves(p_state.params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+# ------------------------------------------------------- length bucketing
+def test_lm_varlen_source_per_index_deterministic():
+    src = lm_varlen_sample_source(16, vocab=11, min_seq=2)
+    whole = src(0, 8)
+    part = src(5, 3)
+    for k in ("tokens", "labels", "length"):
+        np.testing.assert_array_equal(np.asarray(whole[k])[5:8],
+                                      np.asarray(part[k]))
+    lengths = np.asarray(whole["length"])
+    assert ((2 <= lengths) & (lengths <= 16)).all()
+    toks = np.asarray(whole["tokens"])
+    for i, ln in enumerate(lengths):
+        assert (toks[i, ln:] == 0).all()
+    with pytest.raises(ValueError, match="min_seq"):
+        lm_varlen_sample_source(8, vocab=11, min_seq=9)
+
+
+def _indexed_varlen(max_seq):
+    base = lm_varlen_sample_source(max_seq, vocab=11, min_seq=2)
+
+    def source(start, count):
+        b = dict(base(start, count))
+        b["idx"] = jnp.arange(start, start + count)
+        return b
+
+    return source
+
+
+def test_bucketed_stream_trims_and_covers_every_sample_once():
+    bounds = (4, 8, 16)
+    bs = LengthBucketedStream(_indexed_varlen(16), microbatch=4,
+                              boundaries=bounds, lookahead=3)
+    seen = []
+    for _ in range(15):
+        b = next(bs)
+        width = b["tokens"].shape[1]
+        assert width in bounds
+        assert (np.asarray(b["length"]) <= width).all()
+        seen.extend(np.asarray(b["idx"]).tolist())
+    # every yielded sample exactly once, and pulled = yielded + queued
+    assert len(seen) == len(set(seen)) == 60
+    assert bs.position == 60 + bs.queued()
+
+
+def test_bucketed_stream_deterministic_and_validates():
+    def mk():
+        return LengthBucketedStream(_indexed_varlen(16), microbatch=4,
+                                    boundaries=(4, 8, 16))
+    a, b = mk(), mk()
+    for _ in range(5):
+        ba, bb = next(a), next(b)
+        for k in ba:
+            np.testing.assert_array_equal(np.asarray(ba[k]),
+                                          np.asarray(bb[k]))
+    with pytest.raises(ValueError, match="boundaries"):
+        LengthBucketedStream(_indexed_varlen(8), 4, boundaries=())
+    with pytest.raises(ValueError, match="microbatch"):
+        LengthBucketedStream(_indexed_varlen(8), 0, boundaries=(8,))
+
+
+# ------------------------------------------------- adaptive probe cadence
+def _cadence_controller(values, **cfg_kw):
+    vals = iter(values)
+    cfg = ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                           cadence="adaptive", **cfg_kw)
+    return AdaptiveBatchController(
+        lambda opt, k: make_train_step(TASK, opt, accum_steps=k),
+        lambda b: _opt(batch=b),
+        lambda step, state: {"grad_noise_scale": float(next(vals))},
+        cfg, init_batch=16, base_lr=BASE_LR, base_batch_size=BASE_BATCH)
+
+
+def test_adaptive_cadence_tracks_drift_and_backs_off():
+    # drifting readings: EMA moves > threshold between boundaries ->
+    # the interval halves toward min_every; once readings stabilize it
+    # doubles back up, capped at the static `every` ceiling
+    drift = [10.0, 100.0, 10.0, 100.0]
+    stable = [40.0] * 30
+    ctrl = _cadence_controller(drift + stable, every=8, min_every=1,
+                               drift_threshold=0.25, ema=0.5,
+                               deadband=1e9)   # deadband: never switch
+    intervals, state = [], object()
+    for step in range(120):
+        if ctrl.due(step):
+            out = ctrl(step, state)
+            intervals.append(int(out["probe_interval"]))
+            assert out["probe_interval"] == ctrl.probe_interval
+            assert 1 <= out["probe_interval"] <= 8
+        # real per-step work, so the measured-probe-cost floor (probe
+        # seconds vs per-step seconds) stays at min_every for the
+        # instant stub probe
+        time.sleep(5e-4)
+    assert min(intervals) < 8, intervals      # drift tightened cadence
+    assert intervals[-1] == 8, intervals      # stability backed off
+
+
+def test_adaptive_cadence_static_default_unchanged():
+    # static cadence: due() is exactly the legacy step % every rule,
+    # and probe_interval reports the static every
+    vals = [40.0] * 10
+    cfg = ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                           every=5)
+    ctrl = AdaptiveBatchController(
+        lambda opt, k: make_train_step(TASK, opt, accum_steps=k),
+        lambda b: _opt(batch=b),
+        lambda step, state: {"grad_noise_scale": float(vals.pop())},
+        cfg, init_batch=16, base_lr=BASE_LR, base_batch_size=BASE_BATCH)
+    assert [s for s in range(11) if ctrl.due(s)] == [0, 5, 10]
+    out = ctrl(0, object())
+    assert out["probe_interval"] == 5.0
+    assert math.isfinite(out["probe_seconds"])
+
+
+def test_adaptive_cadence_config_validation():
+    with pytest.raises(ValueError, match="cadence"):
+        ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                         cadence="sometimes")
+    with pytest.raises(ValueError, match="min_every"):
+        ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                         every=4, min_every=5, cadence="adaptive")
+    with pytest.raises(ValueError, match="probe_budget"):
+        ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                         probe_budget=0.0, cadence="adaptive")
+
+
+class _CountingGNS:
+    """dispatch/resolve GNS stub: counts side-stream dispatches."""
+
+    def __init__(self, value=40.0):
+        self.value = value
+        self.dispatch_steps: list[int] = []
+        self.resolve_count = 0
+
+    def dispatch(self, step, state):
+        self.dispatch_steps.append(step)
+        return jnp.asarray(self.value)
+
+    def resolve(self, raw):
+        self.resolve_count += 1
+        return {"grad_noise_scale": float(jax.device_get(raw))}
+
+    def __call__(self, step, state):
+        return self.resolve(self.dispatch(step, state))
+
+
+def test_probe_lead_dispatches_before_boundary():
+    probe = _CountingGNS()
+    cfg = ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                           every=4, deadband=1e9)
+    ctrl = AdaptiveBatchController(
+        lambda opt, k: make_train_step(TASK, opt, accum_steps=k),
+        lambda b: _opt(batch=b), probe, cfg, init_batch=16,
+        base_lr=BASE_LR, base_batch_size=BASE_BATCH, probe_lead=2)
+    state = object()
+    boundary_steps = []
+    for step in range(9):
+        ctrl.prepare(step, state)
+        if probe_due(ctrl, step):
+            ctrl(step, state)
+            boundary_steps.append(step)
+    assert boundary_steps == [0, 4, 8]
+    # boundary 0 has no lead (due immediately); boundaries 4 and 8 get
+    # their probe launched probe_lead=2 steps early, exactly once each
+    assert probe.dispatch_steps == [0, 2, 6]
+    assert probe.resolve_count == 3
+
+
+def test_probe_lead_zero_keeps_synchronous_dispatch():
+    probe = _CountingGNS()
+    cfg = ControllerConfig(microbatch=4, batch_min=4, batch_max=64,
+                           every=4, deadband=1e9)
+    ctrl = AdaptiveBatchController(
+        lambda opt, k: make_train_step(TASK, opt, accum_steps=k),
+        lambda b: _opt(batch=b), probe, cfg, init_batch=16,
+        base_lr=BASE_LR, base_batch_size=BASE_BATCH)
+    state = object()
+    for step in range(5):
+        ctrl.prepare(step, state)
+        if probe_due(ctrl, step):
+            ctrl(step, state)
+    assert probe.dispatch_steps == [0, 4]
+    with pytest.raises(ValueError, match="probe_lead"):
+        AdaptiveBatchController(
+            lambda opt, k: make_train_step(TASK, opt, accum_steps=k),
+            lambda b: _opt(batch=b), probe, cfg, init_batch=16,
+            probe_lead=-1)
+
+
+def test_probe_due_predicate():
+    class Static:
+        every = 4
+
+    class Dynamic:
+        every = 100
+
+        def due(self, step):
+            return step in (1, 7)
+
+    assert [s for s in range(9) if probe_due(Static(), s)] == [0, 4, 8]
+    assert [s for s in range(9) if probe_due(Dynamic(), s)] == [1, 7]
+
+
+def test_launcher_jsonl_schema_roundtrip(tmp_path):
+    """BufferedSink(JsonlSink) + ring-delayed writes still produce a
+    validate_jsonl-clean trace with ordered steps."""
+    path = tmp_path / "trace.jsonl"
+    sink = BufferedSink(sink_lib.JsonlSink(str(path),
+                                           static={"arch": "mlp"}))
+    opt = _opt()
+    step = make_train_step(TASK, opt)
+    fit(step, TrainState.create(_params(), opt),
+        batch_iterator(DATA, 16), 6, sink=sink,
+        callbacks=[_SquareProbe()], async_metrics=4, close_sink=True)
+    n = sink_lib.validate_jsonl(str(path))
+    recs = [json.loads(line) for line in path.read_text().splitlines()]
+    assert n == len(recs) == 6 + 2   # 6 train + probe at steps 0, 3
+    assert [r["step"] for r in recs] == sorted(r["step"] for r in recs)
+    assert all(r["arch"] == "mlp" for r in recs)

@@ -11,6 +11,12 @@
 #   4b. kernel bench quick sweep — writes the machine-readable
 #      experiments/bench/BENCH_kernels.json trajectory (per-precision
 #      us/step, pallas_call counts, modeled HBM bytes/step)
+#   4c. async overlap tier (-m overlap): delayed-metrics bit-parity,
+#      BufferedSink byte-identity, PrefetchingStream switch-at-step-N
+#      sample identity, adaptive probe cadence
+#   4d. async launcher smoke (--prefetch 2 --async-metrics 4) + the
+#      pipeline bench quick run — writes BENCH_pipeline.json (overlap
+#      ratio, metric parity, bucketing pad waste)
 #   5. multidevice: mesh-native numerics on 8 fabricated CPU devices
 #      (shard_map train-step parity, DP controller (D,K) retargeting,
 #      cross-mesh checkpoint round-trips; the GSPMD-parity subprocess
@@ -45,6 +51,18 @@ python -m repro.diagnostics.smoke --out experiments/bench
 echo "== kernel bench quick sweep (experiments/bench/BENCH_kernels.json) =="
 PYTHONPATH="src:.:$PYTHONPATH" python benchmarks/bench_kernels.py --quick
 
+echo "== async overlap tier (-m overlap: metric ring, buffered sink, prefetch, cadence) =="
+python -m pytest -q -m overlap
+
+echo "== async launcher smoke (prefetch + async metrics, JSONL parity-checked schema) =="
+python -m repro.launch.train --smoke --steps 2 --seq 64 \
+    --global-batch 8 --microbatch 2 --log-every 1 \
+    --prefetch 2 --async-metrics 4 \
+    --metrics-out experiments/bench/smoke_async_launcher.jsonl
+
+echo "== pipeline bench quick run (experiments/bench/BENCH_pipeline.json) =="
+PYTHONPATH="src:.:$PYTHONPATH" python benchmarks/bench_pipeline.py --quick
+
 echo "== multidevice (8 fabricated CPU devices: shard_map parity, DP controller, sharded ckpts; GSPMD parity ran in tier 1) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest -q tests/test_mesh_train.py
@@ -64,6 +82,7 @@ fi
 echo "== JSONL metrics contract (tools/validate_metrics.py) =="
 python tools/validate_metrics.py \
     experiments/bench/smoke_launcher.jsonl \
+    experiments/bench/smoke_async_launcher.jsonl \
     experiments/bench/smoke_mesh_launcher.jsonl \
     experiments/bench/probe_smoke.jsonl
 
