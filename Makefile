@@ -1,4 +1,4 @@
-.PHONY: check test fast bench bench-pipeline overlap smoke lint \
+.PHONY: check test fast bench bench-pipeline overlap obs smoke lint \
 	multidevice
 
 # tier-1 suite + REPRO_FORCE_REF=1 oracle re-run (both dispatch modes)
@@ -38,6 +38,12 @@ bench-pipeline:
 # the async overlap subsystem's test tier (also part of `make check`)
 overlap:
 	PYTHONPATH=src python -m pytest -q -m overlap
+
+# observability tier: span tracer + trace-v1 schema + layerwise
+# trust-ratio telemetry (oracle parity, 2-pallas_call invariant,
+# <=3% tracing overhead budget) + render/report/bench-gate tools
+obs:
+	PYTHONPATH=src python -m pytest -q -m obs
 
 # end-to-end CPU smoke of the launcher: global batch 8 = 4 accumulated
 # microbatches of 2, optimizer applied once per global step — then the

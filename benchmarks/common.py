@@ -15,6 +15,7 @@ import csv
 import json
 import os
 import platform
+import subprocess
 import sys
 import time
 from typing import Callable, Iterable
@@ -26,9 +27,35 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
 
 BENCH_SCHEMA = "bench/v2"
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git(*argv: str) -> str:
+    return subprocess.check_output(
+        ("git", "-C", _REPO_ROOT) + argv, text=True,
+        stderr=subprocess.DEVNULL).strip()
+
+
+def git_provenance() -> dict:
+    """``{"git_sha": ..., "git_dirty": ...}`` of the repo the bench ran
+    from, or ``{}`` outside a checkout (tarball installs) — so two
+    BENCH artifacts can always be tied back to the exact code that
+    produced them before their numbers are compared."""
+    try:
+        sha = _git("rev-parse", "HEAD")
+        dirty = bool(_git("status", "--porcelain"))
+    except (OSError, subprocess.CalledProcessError):
+        return {}
+    return {"git_sha": sha, "git_dirty": dirty}
+
 
 def host_info() -> dict:
     """The environment block every ``BENCH_*.json`` carries."""
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except (ImportError, AttributeError):
+        jaxlib_version = None
     return {
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
@@ -36,6 +63,8 @@ def host_info() -> dict:
         "platform": platform.platform(),
         "python": platform.python_version(),
         "jax": jax.__version__,
+        "jaxlib": jaxlib_version,
+        **git_provenance(),
     }
 
 

@@ -70,6 +70,7 @@ from repro.core import flatten
 from repro.core import labels as labels_lib
 from repro.core.base import GradientTransform, PyTree
 from repro.kernels import ref
+from repro.obs import layerwise as obs_layerwise
 
 UseKernel = Union[bool, str]
 
@@ -210,7 +211,8 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
         spec = flatten.build_spec(params, _labels(params), dtype=sdtype)
         base_lr, bc1, bc2 = _step_scalars(state)
         from repro.kernels import ops as kops
-        new_bufs, delta2d = kops.segmented_update(
+        telemetry = obs_layerwise.active()
+        out = kops.segmented_update(
             flatten.pack_tree(params, spec), flatten.pack_tree(grads, spec),
             tuple(state[1:]),
             seg_ids=spec.segment_ids(), adapt_mask=spec.adapt_mask(),
@@ -218,7 +220,14 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
             weight_decay=weight_decay, momentum=momentum, b1=b1, b2=b2,
             eps=eps, nesterov=nesterov, trust_clip=trust_clip,
             bc1=bc1, bc2=bc2, stochastic_round=stochastic,
-            seed=state.step)
+            seed=state.step, telemetry=telemetry)
+        if telemetry:
+            new_bufs, delta2d, telem = out
+            # the triple the kernel's host pass already materialized
+            # between its two launches — surfacing it is free
+            obs_layerwise.deposit(telem)
+        else:
+            new_bufs, delta2d = out
         updates = flatten.unpack_tree(delta2d, spec)
         return updates, state_cls(state.step + 1, *new_bufs)
 
@@ -227,6 +236,11 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
     def _update_tree(grads, state, params):
         lab = _labels(params)
         base_lr, bc1, bc2 = _step_scalars(state)
+        telemetry = obs_layerwise.active()
+        # per-leaf (w_norm, g_norm, trust_ratio) in tree_map order —
+        # the same segment order the fused substrate packs, so the two
+        # paths' telemetry streams are name-compatible
+        rows: list = []
         if use_kernel == "per_tensor":
             from repro.kernels import ops as kops
 
@@ -241,16 +255,27 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
                     w32, g32, bufs[0], base_lr=base_lr, eta=eta,
                     weight_decay=weight_decay, momentum_mu=momentum,
                     eps=eps, nesterov=nesterov)
+                if telemetry:
+                    # per-tensor kernel is "lars"-only: bvec == g
+                    rows.append(ref.trust_ratio(
+                        jnp.sum(jnp.square(w32)), jnp.sum(jnp.square(g32)),
+                        jnp.asarray(adapt), mode=mode, eta=eta,
+                        weight_decay=weight_decay, eps=eps,
+                        trust_clip=trust_clip))
                 return (new_m, delta)
             d, bufs2 = ref.direction(mode, w32, g32, bufs, b1=b1, b2=b2,
                                      bc1=bc1, bc2=bc2, eps=eps)
             # same table math as the fused host pass, on a 1-segment
             # "tree": the leaf's Σw²/Σb² and its own adapt flag
             bvec = d + weight_decay * w32 if mode == "lamb" else g32
-            table = ref.trust_scale_table(
+            wn, bn, ratio = ref.trust_ratio(
                 jnp.sum(jnp.square(w32)), jnp.sum(jnp.square(bvec)),
-                jnp.asarray(adapt), base_lr, mode=mode, eta=eta,
+                jnp.asarray(adapt), mode=mode, eta=eta,
                 weight_decay=weight_decay, eps=eps, trust_clip=trust_clip)
+            if telemetry:
+                rows.append((wn, bn, ratio))
+            table = ref.scales_from_ratio(ratio, jnp.asarray(adapt),
+                                          base_lr, weight_decay)
             scaled = table[0] * d + table[1] * w32
             new_bufs, delta = ref.integrate(mode, w32, bufs2, scaled,
                                             momentum=momentum,
@@ -259,6 +284,12 @@ def layerwise_transform(base_lr_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
 
         out = jax.tree_util.tree_map(per_leaf, grads, params,
                                      *state[1:], lab)
+        if telemetry and rows:
+            obs_layerwise.deposit({
+                "w_norm": jnp.stack([r[0] for r in rows]),
+                "g_norm": jnp.stack([r[1] for r in rows]),
+                "trust_ratio": jnp.stack([r[2] for r in rows]),
+            })
         def is_out(x):
             return isinstance(x, tuple)
         new_bufs = tuple(

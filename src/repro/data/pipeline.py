@@ -277,15 +277,24 @@ class PrefetchingStream:
     Thread-compat: one producer, one consumer; ``set_*`` must be
     called from the consumer thread between ``next()`` calls (exactly
     how ``trainer.fit``'s controller path drives it).
+
+    ``tracer=`` (a :class:`repro.obs.trace.Tracer`) records a
+    ``produce`` span around each producer pull+place; alongside the
+    consumer loop's ``data_wait`` spans it shows whether the pipeline
+    keeps up (spans land in the shared ring tagged with the producer
+    thread's name).
     """
 
     def __init__(self, stream, *, size: int = 2,
-                 place: Optional[Callable[[Any], Any]] = None):
+                 place: Optional[Callable[[Any], Any]] = None,
+                 tracer=None):
         if size < 1:
             raise ValueError(f"size must be >= 1, got {size}")
+        from repro.obs import trace as obs_trace
         self.stream = stream
         self.size = int(size)
         self.place = place
+        self._tracer = obs_trace.NULL if tracer is None else tracer
         self._buf: collections.deque = collections.deque()
         self._cv = threading.Condition()
         # serializes stream access: each producer pull vs. the
@@ -332,9 +341,10 @@ class PrefetchingStream:
                     return
                 try:
                     pos0 = getattr(self.stream, "position", None)
-                    batch = next(self.stream)
-                    if self.place is not None:
-                        batch = self.place(batch)
+                    with self._tracer.span("produce"):
+                        batch = next(self.stream)
+                        if self.place is not None:
+                            batch = self.place(batch)
                     consumed = None if pos0 is None \
                         else self.stream.position - pos0
                 except BaseException as e:   # incl. StopIteration

@@ -309,11 +309,57 @@ def export_recorder(recorder, sink: MetricsSink, *,
     return len(recorder.steps)
 
 
-def validate_jsonl(path: str) -> int:
+#: trace-v1 ``kind`` vocabulary (mirrors ``repro.obs.trace.KINDS``;
+#: duplicated here so the validator stays importable without jax).
+TRACE_KINDS = ("span", "instant", "counter")
+
+
+def _validate_trace(rec: dict, where: str) -> None:
+    """trace-v1 record rules, on top of the base metrics schema:
+    ``kind`` in :data:`TRACE_KINDS`, non-empty str ``name``, numeric
+    ``ts_us >= 0``; spans carry ``dur_us >= 0``, counters a numeric
+    ``value``."""
+    if rec["trace"] != "v1":
+        raise ValueError(
+            f"{where}: unknown trace version {rec['trace']!r} "
+            f"(expected 'v1')")
+    if rec.get("kind") not in TRACE_KINDS:
+        raise ValueError(
+            f"{where}: trace 'kind' is {rec.get('kind')!r}, expected "
+            f"one of {TRACE_KINDS}")
+    name = rec.get("name")
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"{where}: trace 'name' must be a non-empty "
+                         f"string, got {name!r}")
+    ts = rec.get("ts_us")
+    if isinstance(ts, bool) or not isinstance(ts, (int, float)) or ts < 0:
+        raise ValueError(f"{where}: trace 'ts_us' must be a number "
+                         f">= 0, got {ts!r}")
+    if rec["kind"] == "span":
+        dur = rec.get("dur_us")
+        if isinstance(dur, bool) or not isinstance(dur, (int, float)) \
+                or dur < 0:
+            raise ValueError(f"{where}: span 'dur_us' must be a number "
+                             f">= 0, got {dur!r}")
+    if rec["kind"] == "counter":
+        value = rec.get("value")
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            raise ValueError(f"{where}: counter 'value' must be a "
+                             f"number, got {value!r}")
+
+
+def validate_jsonl(path: str, *, counts: bool = False):
     """Schema-check a metrics JSONL: every line a JSON object with an
-    int ``step`` and only scalar/str/bool/list values.  Returns the
-    record count; raises ``ValueError`` on any violation."""
-    n = 0
+    int ``step`` and only scalar/str/bool/list values.  Lines carrying
+    ``"trace": "v1"`` (a :class:`repro.obs.trace.Tracer` export) are
+    additionally held to the trace-v1 rules — valid kind, non-empty
+    name, non-negative ``ts_us`` (plus ``dur_us`` for spans and a
+    numeric ``value`` for counters).
+
+    Returns the record count, or with ``counts=True`` a
+    ``(total, trace)`` pair so callers can assert a run actually
+    exported its timeline; raises ``ValueError`` on any violation."""
+    n = n_trace = 0
     with open(path) as f:
         for lineno, line in enumerate(f, 1):
             if not line.strip():
@@ -336,5 +382,8 @@ def validate_jsonl(path: str) -> int:
                     raise ValueError(
                         f"{path}:{lineno}: field {k!r} has "
                         f"non-scalar type {type(v).__name__}")
+            if "trace" in rec:
+                _validate_trace(rec, f"{path}:{lineno}")
+                n_trace += 1
             n += 1
-    return n
+    return (n, n_trace) if counts else n

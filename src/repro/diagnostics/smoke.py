@@ -5,9 +5,13 @@ Run by ``tools/check.sh`` / ``make smoke``:
     PYTHONPATH=src python -m repro.diagnostics.smoke
 
 Trains a tiny MLP classifier for a few steps with a LanczosProbe and a
-SharpnessProbe streaming into a JSONL sink in a tempdir, then
-schema-validates the file and asserts the probe emitted a finite
-λ_max every scheduled step.  Exit code 0 = subsystem end-to-end OK.
+SharpnessProbe streaming into a JSONL sink in a tempdir — with a span
+:class:`~repro.obs.trace.Tracer` on the fit loop — then
+schema-validates the metrics file, asserts the probe emitted a finite
+λ_max every scheduled step, exports the trace as trace-v1 JSONL and
+schema-validates THAT (including the per-step ``data_wait`` /
+``dispatch`` / ``resolve`` and probe spans).  Exit code 0 = subsystem
+end-to-end OK.
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ from repro.core import build_optimizer
 from repro.data.synthetic import ClassificationData, batch_iterator
 from repro.diagnostics import probes, sink as sink_lib
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+from repro.obs import trace as obs_trace
 from repro.training import TrainState, classifier_task, fit
 from repro.training.trainer import make_train_step
 
@@ -38,9 +43,10 @@ def run(out_dir: str, *, steps: int = 4, probe_every: int = 2,
     task = classifier_task(apply_mlp_classifier)
     probe_batch = data.batch(jax.random.PRNGKey(99), 16)
     path = os.path.join(out_dir, "probe_smoke.jsonl")
+    tracer = obs_trace.Tracer()
     with sink_lib.JsonlSink(path, static={"run": "smoke"}) as sink:
         fit(make_train_step(task, opt), state,
-            batch_iterator(data, 16), steps, sink=sink,
+            batch_iterator(data, 16), steps, sink=sink, tracer=tracer,
             callbacks=[
                 probes.LanczosProbe(task, probe_batch, every=probe_every,
                                     num_iters=num_iters, top_k=1),
@@ -58,8 +64,27 @@ def run(out_dir: str, *, steps: int = 4, probe_every: int = 2,
             f"got {len(lam)} (of {n} total)")
     if not all(math.isfinite(x) for x in lam):
         raise AssertionError(f"non-finite lambda_max in trace: {lam}")
+
+    # trace smoke: export the loop's spans and schema-validate them
+    trace_path = os.path.join(out_dir, "trace_smoke.jsonl")
+    with sink_lib.JsonlSink(trace_path) as tsink:
+        tracer.export(tsink)
+    _, n_trace = sink_lib.validate_jsonl(trace_path, counts=True)
+    names = {r["name"] for r in map(json.loads, open(trace_path))}
+    # every step records its three loop phases (+ probe spans on the
+    # scheduled steps)
+    missing = {"data_wait", "dispatch", "resolve", "probe"} - names
+    if missing:
+        raise AssertionError(
+            f"trace smoke: expected span names missing: {sorted(missing)} "
+            f"(got {sorted(names)})")
+    if n_trace < 3 * steps:
+        raise AssertionError(
+            f"trace smoke: {n_trace} trace records < {3 * steps} "
+            f"(3 loop spans x {steps} steps)")
     print(f"probe smoke: OK — {n} JSONL records, "
-          f"{len(lam)} λ_max probes (last={lam[-1]:.4f}) -> {path}")
+          f"{len(lam)} λ_max probes (last={lam[-1]:.4f}) -> {path}; "
+          f"{n_trace} trace spans -> {trace_path}")
     return path
 
 

@@ -56,7 +56,10 @@ def segmented_update(w2d, g2d, bufs, **kw):
     mixed-precision knobs ``stochastic_round``/``seed`` (state buffers
     keep their storage dtype; the delta is always f32 — kernel and
     oracle round at identical points, so REPRO_FORCE_REF=1 remains
-    ground truth at any precision policy).
+    ground truth at any precision policy) and ``telemetry`` (surface
+    the per-segment ``(w_norm, g_norm, trust_ratio)`` triple as a
+    third return — zero extra launches, identical under kernel and
+    oracle dispatch; see ``repro.obs.layerwise``).
     """
     if _force_ref():
         return ref.ref_segmented_update(w2d, g2d, bufs, **kw)

@@ -152,15 +152,14 @@ def integrate(mode: str, w, bufs, scaled, *, momentum: float = 0.9,
     return bufs, -scaled    # lamb
 
 
-def trust_scale_table(w2, b2, adapt_mask, base_lr, *, mode: str,
-                      eta: float, weight_decay: float, eps: float,
-                      trust_clip=None) -> jnp.ndarray:
-    """Per-segment (sg, sw) from per-segment Σw², Σb² -> (2, nseg) f32.
+def trust_ratio(w2, b2, adapt_mask, *, mode: str, eta: float,
+                weight_decay: float, eps: float, trust_clip=None):
+    """Per-segment ``(w_norm, b_norm, ratio)`` from Σw², Σb².
 
-    ``b`` is the trust denominator vector: g for LARS/TVLARS, the
-    wd-augmented Adam direction for LAMB. Non-ADAPT (1-D bypass)
-    segments get ratio 1 and no weight decay, reproducing the reference
-    implementations' bias/norm handling.
+    The layer-wise telemetry triple the paper's analysis runs on
+    (LWN, LGN and the effective trust ratio), factored out of
+    :func:`trust_scale_table` so the fused step can surface it without
+    recomputing anything — the table is just ``base_lr · ratio``.
     """
     wn = jnp.sqrt(w2)
     bn = jnp.sqrt(b2)
@@ -173,9 +172,32 @@ def trust_scale_table(w2, b2, adapt_mask, base_lr, *, mode: str,
     if trust_clip is not None:
         ratio = jnp.minimum(ratio, trust_clip)
     ratio = jnp.where(adapt_mask, ratio, 1.0)
+    return wn, bn, ratio
+
+
+def scales_from_ratio(ratio, adapt_mask, base_lr,
+                      weight_decay: float) -> jnp.ndarray:
+    """(sg, sw) = (lr·ratio, lr·ratio·wd) stacked -> (2, ...) f32;
+    non-ADAPT segments take no weight decay."""
     sg = jnp.asarray(base_lr, jnp.float32) * ratio
     sw = jnp.where(adapt_mask, sg * weight_decay, 0.0)
     return jnp.stack([sg, sw]).astype(jnp.float32)
+
+
+def trust_scale_table(w2, b2, adapt_mask, base_lr, *, mode: str,
+                      eta: float, weight_decay: float, eps: float,
+                      trust_clip=None) -> jnp.ndarray:
+    """Per-segment (sg, sw) from per-segment Σw², Σb² -> (2, nseg) f32.
+
+    ``b`` is the trust denominator vector: g for LARS/TVLARS, the
+    wd-augmented Adam direction for LAMB. Non-ADAPT (1-D bypass)
+    segments get ratio 1 and no weight decay, reproducing the reference
+    implementations' bias/norm handling.
+    """
+    _, _, ratio = trust_ratio(w2, b2, adapt_mask, mode=mode, eta=eta,
+                              weight_decay=weight_decay, eps=eps,
+                              trust_clip=trust_clip)
+    return scales_from_ratio(ratio, adapt_mask, base_lr, weight_decay)
 
 
 # ---------------------------------------------------------------------------
@@ -229,7 +251,7 @@ def ref_segmented_update(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
                          momentum: float, b1: float, b2: float, eps: float,
                          nesterov: bool = False, trust_clip=None,
                          bc1=1.0, bc2=1.0, stochastic_round: bool = False,
-                         seed=0):
+                         seed=0, telemetry: bool = False):
     """Whole-tree layer-wise step on the flat substrate, in pure jnp.
 
     Inputs are ``(num_rows, LANES)`` buffers from
@@ -241,6 +263,12 @@ def ref_segmented_update(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
     when ``stochastic_round``, seeded per step by ``seed``) and the
     returned ``delta2d`` is always f32. Returns ``(new_bufs, delta2d)``
     with the same flat layout.
+
+    ``telemetry=True`` additionally returns the per-segment
+    ``{"w_norm", "g_norm", "trust_ratio"}`` triple (each ``(nseg,)``
+    f32) already materialized on the way to the trust table — the
+    layer-wise stream ``repro.obs.layerwise`` surfaces, at zero extra
+    passes over the buffers.
     """
     nseg = adapt_mask.shape[0]
     ids = seg_ids.reshape(-1)
@@ -257,9 +285,10 @@ def ref_segmented_update(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
     w2 = jax.ops.segment_sum(row_w2, ids, num_segments=nseg)
     b2sum = jax.ops.segment_sum(row_b2, ids, num_segments=nseg)
 
-    table = trust_scale_table(w2, b2sum, adapt_mask, base_lr, mode=mode,
-                              eta=eta, weight_decay=weight_decay, eps=eps,
-                              trust_clip=trust_clip)
+    wn, bn, ratio = trust_ratio(w2, b2sum, adapt_mask, mode=mode, eta=eta,
+                                weight_decay=weight_decay, eps=eps,
+                                trust_clip=trust_clip)
+    table = scales_from_ratio(ratio, adapt_mask, base_lr, weight_decay)
     sg = table[0][ids][:, None]
     sw = table[1][ids][:, None]
     scaled = sg * d + sw * w32
@@ -270,6 +299,9 @@ def ref_segmented_update(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
         store(nb, dt, bits=buf_bits(idx, seed, k)
               if stochastic_round else None)
         for k, (nb, dt) in enumerate(zip(new_bufs, state_dtypes)))
+    if telemetry:
+        telem = {"w_norm": wn, "g_norm": bn, "trust_ratio": ratio}
+        return new_bufs, delta, telem
     return new_bufs, delta
 
 

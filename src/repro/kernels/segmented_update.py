@@ -215,13 +215,17 @@ def segmented_update_pallas(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
                             eps: float, nesterov: bool = False,
                             trust_clip=None, bc1=1.0, bc2=1.0,
                             stochastic_round: bool = False, seed=0,
+                            telemetry: bool = False,
                             interpret: bool = True):
     """Whole-tree layer-wise step: exactly two ``pallas_call``s.
 
     Same contract as ``ref.ref_segmented_update`` — flat ``(rows, 128)``
     buffers in (any storage dtype; norms/table/integration accumulate
     in f32), ``(new_bufs, delta2d)`` out with state buffers at their
-    input dtype and ``delta2d`` in f32.
+    input dtype and ``delta2d`` in f32.  ``telemetry=True`` adds the
+    per-segment ``(w_norm, g_norm, trust_ratio)`` dict third return —
+    it is read off the pass-1 norm table between the two launches, so
+    the 2-``pallas_call`` invariant holds with telemetry on.
     """
     if mode not in ref.MODES:
         raise ValueError(f"unknown mode {mode!r}; one of {ref.MODES}")
@@ -265,9 +269,10 @@ def segmented_update_pallas(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
     )(*norm_args)
 
     # ---- host: per-segment trust table, padded back to nseg_pad ----
-    table = ref.trust_scale_table(
-        table2[0, :nseg], table2[1, :nseg], adapt_mask, base_lr, mode=mode,
+    wn, bn, ratio = ref.trust_ratio(
+        table2[0, :nseg], table2[1, :nseg], adapt_mask, mode=mode,
         eta=eta, weight_decay=weight_decay, eps=eps, trust_clip=trust_clip)
+    table = ref.scales_from_ratio(ratio, adapt_mask, base_lr, weight_decay)
     table = jnp.pad(table, ((0, 0), (0, nseg_pad - nseg)))
 
     # ---- pass 2: gathered-scale elementwise apply ----
@@ -296,4 +301,7 @@ def segmented_update_pallas(w2d, g2d, bufs, *, seg_ids, adapt_mask, base_lr,
         out_shape=out_shape,
         interpret=interpret,
     )(*args)
+    if telemetry:
+        telem = {"w_norm": wn, "g_norm": bn, "trust_ratio": ratio}
+        return tuple(outs[:-1]), outs[-1], telem
     return tuple(outs[:-1]), outs[-1]

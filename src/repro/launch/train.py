@@ -45,10 +45,22 @@ at fixed ``--microbatch`` (peak memory never moves), clamped to
 ``[--batch-min, --batch-max]``, with the LR re-scaled to the current
 batch; decisions stream as ``controller/*`` metrics.
 
+Observability (``repro.obs``): ``--trace-out trace.jsonl`` records
+host-side spans (data_wait / dispatch / resolve / probe / controller /
+produce) into a bounded ring and exports them as trace-v1 JSONL —
+render with ``tools/render_trace.py``, summarize with
+``tools/obs_report.py``.  ``--layerwise-every N`` streams the paper's
+per-layer ``(w_norm, g_norm, trust_ratio)`` triples as
+``layerwise/{param}/{metric}`` metrics every N steps, read straight
+off the trust table the optimizer already computes (zero extra
+``pallas_call``s).  ``--profile-dir`` captures a ``jax.profiler``
+trace over a ``--profile-start``/``--profile-steps`` window.
+
 Usage:
   python -m repro.launch.train --arch qwen2.5-3b --smoke \
       --optimizer tvlars --steps 20 --global-batch 8 --microbatch 2 \
-      --probe-every 5 --metrics-out /tmp/run.jsonl
+      --probe-every 5 --metrics-out /tmp/run.jsonl \
+      --trace-out /tmp/trace.jsonl --layerwise-every 5
 """
 from __future__ import annotations
 
@@ -62,6 +74,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core import build_optimizer
+from repro.core import labels as labels_lib
 from repro.core.layerwise import PRECISIONS
 from repro.data import pipeline
 from repro.data.synthetic import lm_batch, lm_sample_source
@@ -71,6 +84,9 @@ from repro.launch import sharding
 from repro.launch.mesh import make_host_mesh
 from repro.models import extra_embed_shape, get_model
 from repro.models import layers as layers_lib
+from repro.obs import layerwise as obs_layerwise
+from repro.obs import profiler as obs_profiler
+from repro.obs import trace as obs_trace
 from repro.training import tasks
 from repro.training.controller import (AdaptiveBatchController,
                                        ControllerConfig)
@@ -168,7 +184,32 @@ def main() -> None:
                          "exact same numbers, delayed materialization), "
                          "and buffer JSONL writes onto a writer thread "
                          "(diagnostics.BufferedSink)")
+    ap.add_argument("--layerwise-every", type=int, default=0, metavar="N",
+                    help="emit the per-layer (w_norm, g_norm, "
+                         "trust_ratio) stream every N steps (0 = off) "
+                         "as layerwise/{param}/{metric} metrics — read "
+                         "straight off the fused step's host trust "
+                         "table, zero extra pallas_calls (see "
+                         "repro.obs.layerwise)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record host-side spans (data_wait / dispatch "
+                         "/ resolve / probe / controller / produce) and "
+                         "write them as trace-v1 JSONL here; render "
+                         "with tools/render_trace.py, summarize with "
+                         "tools/obs_report.py")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace into DIR over "
+                         "the [--profile-start, +--profile-steps) "
+                         "step window")
+    ap.add_argument("--profile-start", type=int, default=1,
+                    help="first step of the profiler window (default 1 "
+                         "— skips the compile step)")
+    ap.add_argument("--profile-steps", type=int, default=3,
+                    help="length of the profiler window in steps")
     args = ap.parse_args()
+    if args.layerwise_every < 0:
+        raise SystemExit(f"--layerwise-every {args.layerwise_every} "
+                         f"must be >= 0")
     if args.prefetch < 0 or args.async_metrics < 0:
         raise SystemExit(f"--prefetch {args.prefetch} and "
                          f"--async-metrics {args.async_metrics} must "
@@ -233,6 +274,14 @@ def main() -> None:
             f"--precision {args.precision} requires --use-kernel fused "
             f"(the mixed-precision substrate IS the fused flat buffer)")
 
+    # observability: host-span tracer (NULL when off — call sites never
+    # branch), jax.profiler step window, layerwise telemetry switch
+    tracer = obs_trace.Tracer() if args.trace_out else obs_trace.NULL
+    profiler = obs_profiler.StepProfiler(
+        args.profile_dir, start=args.profile_start,
+        steps=args.profile_steps) if args.profile_dir else None
+    layerwise = args.layerwise_every > 0
+
     def optimizer_for(batch_size: int):
         # schedules/γ_min see the TRUE global batch (samples per
         # optimizer step), not a token-count heuristic
@@ -284,10 +333,11 @@ def main() -> None:
         if ccfg.data_max > 1:
             def make_step(opt_, k, mesh_):
                 return make_train_step(model, opt_, accum_steps=k,
-                                       mesh=mesh_)
+                                       mesh=mesh_, layerwise=layerwise)
         else:
             def make_step(opt_, k):
-                return make_train_step(model, opt_, accum_steps=k)
+                return make_train_step(model, opt_, accum_steps=k,
+                                       layerwise=layerwise)
         try:
             controller = AdaptiveBatchController(
                 make_step,
@@ -345,17 +395,20 @@ def main() -> None:
                 # left to the controller's run step, which shards per
                 # current D)
                 stream = pipeline.PrefetchingStream(stream,
-                                                    size=args.prefetch)
+                                                    size=args.prefetch,
+                                                    tracer=tracer)
             controller.attach(stream)
             step_fn = None
         elif mesh_native:
             step_fn = jax.jit(make_train_step(model, opt,
                                               accum_steps=accum_steps,
-                                              mesh=mesh),
+                                              mesh=mesh,
+                                              layerwise=layerwise),
                               donate_argnums=(0,))
         else:
             step_fn = jax.jit(make_train_step(model, opt,
-                                              accum_steps=accum_steps),
+                                              accum_steps=accum_steps,
+                                              layerwise=layerwise),
                               in_shardings=(state_sh, None),
                               donate_argnums=(0,))
 
@@ -380,7 +433,8 @@ def main() -> None:
                     mesh, b, batch_dim=batch_dim)) if mesh.size > 1 \
                     else pipeline.device_put_batch
                 fixed_iter = pipeline.PrefetchingStream(
-                    fixed_batches(), size=args.prefetch, place=place)
+                    fixed_batches(), size=args.prefetch, place=place,
+                    tracer=tracer)
             else:
                 def _placed():
                     for b in fixed_batches():
@@ -425,16 +479,24 @@ def main() -> None:
                 mesh=mesh if mesh_native and controller is None else None,
                 reorth=not args.probe_no_reorth)
 
-        ring = MetricRing(args.async_metrics) \
+        ring = MetricRing(args.async_metrics, tracer=tracer) \
             if args.async_metrics > 0 else None
+        # segment names for the layerwise stream, in tree-flatten
+        # order — identical to the fused substrate's packing order
+        lw_names = labels_lib.leaf_names(state.params) if layerwise \
+            else None
 
         t0 = time.time()
 
         def emit_train(i, values, last, step_bs=None):
-            host = {k: float(v) for k, v in values.items()
+            rest, lw = obs_layerwise.split_record(dict(values))
+            host = {k: float(v) for k, v in rest.items()
                     if np.ndim(v) == 0}
             if step_bs is not None:
                 host["global_batch"] = float(step_bs)
+            if lw and (args.layerwise_every <= 1
+                       or i % args.layerwise_every == 0):
+                host.update(obs_layerwise.expand(lw, lw_names))
             if sink is not None:
                 sink.write(i, host, last=last)
             if i % args.log_every == 0 or last:
@@ -463,19 +525,27 @@ def main() -> None:
                   + (" [switched]" if out["changed"] else ""))
 
         for i in range(args.steps):
+            if profiler is not None:
+                profiler.step(i)
             if controller is not None:
                 # the batch pulled now trains at the CURRENT target;
                 # retargets only land after this step's probe boundary
                 step_batch_size = controller.global_batch
-                batch = next(stream)
-                state, metrics = controller.step_fn()(state, batch)
+                with tracer.span("data_wait", step=i):
+                    batch = next(stream)
+                with tracer.span("dispatch", step=i):
+                    state, metrics = controller.step_fn()(state, batch)
             else:
                 step_batch_size = None
-                state, metrics = step_fn(state, next(fixed_iter))
+                with tracer.span("data_wait", step=i):
+                    batch = next(fixed_iter)
+                with tracer.span("dispatch", step=i):
+                    state, metrics = step_fn(state, batch)
             last = i == args.steps - 1
             if ring is None:
-                emit_train(i, jax.device_get(metrics), last,
-                           step_batch_size)
+                with tracer.span("resolve", step=i):
+                    host_metrics = jax.device_get(metrics)
+                emit_train(i, host_metrics, last, step_batch_size)
             else:
                 # leave the values on device; the ring materializes
                 # them `async_metrics` steps later (exact same numbers)
@@ -484,16 +554,22 @@ def main() -> None:
                             emit_train(s, v, l, _b), last=last)
             if probe is not None and probes.probe_due(probe, i):
                 if ring is None:
-                    emit_probe(i, probe(i, state), True)
+                    with tracer.span("probe", step=i, probe=probe.name):
+                        out = probe(i, state)
+                    emit_probe(i, out, True)
                 else:
-                    ring.append(i, probe.dispatch(i, state),
+                    with tracer.span("probe", step=i, probe=probe.name,
+                                     mode="dispatch"):
+                        raw = probe.dispatch(i, state)
+                    ring.append(i, raw,
                                 lambda s, v, l:
                                 emit_probe(s, probe.resolve(v), l))
             if controller is not None and probes.probe_due(controller, i):
                 # the decision must land before the next pull, so the
                 # controller call itself stays synchronous; its output
                 # rides the ring only to keep sink records ordered
-                out = controller(i, state)
+                with tracer.span("controller", step=i):
+                    out = controller(i, state)
                 if ring is None:
                     emit_ctrl(i, out, True)
                 else:
@@ -501,6 +577,9 @@ def main() -> None:
                                 lambda s, v, l: emit_ctrl(s, v, l))
         if ring is not None:
             ring.drain()
+        if profiler is not None:
+            profiler.close()
+            print(f"profile -> {args.profile_dir}")
         if isinstance(stream, pipeline.PrefetchingStream):
             stream.close()
         if isinstance(fixed_iter, pipeline.PrefetchingStream):
@@ -508,6 +587,10 @@ def main() -> None:
         if sink is not None:
             sink.close()
             print(f"metrics -> {args.metrics_out}")
+        if args.trace_out:
+            with diag_sink.JsonlSink(args.trace_out) as tsink:
+                n_trace = tracer.export(tsink)
+            print(f"trace -> {args.trace_out} ({n_trace} records)")
         print(f"done: {args.steps} steps in {time.time()-t0:.1f}s, "
               f"final loss {float(metrics['loss']):.4f}")
         assert np.isfinite(float(metrics["loss"])), "NaN/inf loss"

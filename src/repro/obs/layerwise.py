@@ -1,0 +1,157 @@
+"""Layerwise trust-ratio telemetry — the paper's per-layer stream.
+
+The fused optimizer step already materializes the per-segment
+``(w_norm, g_norm, trust_ratio)`` triple between its two
+``pallas_call``s (``ref.trust_ratio`` feeding the trust table); the
+non-fused tree path computes the same triple per leaf.  This module is
+the plumbing that surfaces those values WITHOUT changing the
+``GradientTransform`` interface or adding device work:
+
+* :func:`capture` — a trace-time tap.  ``make_train_step(...,
+  layerwise=True)`` wraps ``optimizer.update`` in ``capture()``; the
+  layer-wise transforms call :func:`deposit` with the traced telemetry
+  arrays, which the step merges into its metrics dict under
+  ``layerwise/{w_norm,g_norm,trust_ratio}`` (each ``(nseg,)`` f32).
+  Because the tap fires at TRACE time the arrays simply become extra
+  jitted-step outputs: zero extra ``pallas_call``s, no sync points,
+  and under ``fit(..., async_metrics=W)`` they ride the MetricRing and
+  materialize W steps late like every other metric.
+
+* :func:`expand` — host-side fan-out of the arrays into named scalar
+  keys ``layerwise/{segment}/{metric}`` using the segment names from
+  ``repro.core.labels.leaf_names`` (tree-flatten order — identical to
+  the flat substrate's segment order by construction).
+
+* :class:`LayerwiseHistory` — bounded decimating history for long
+  runs: when full, the keep-stride doubles and existing snapshots are
+  thinned, so memory stays ~``capacity`` snapshots at any run length
+  while early- and late-phase coverage is preserved.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional, Sequence
+
+PREFIX = "layerwise/"
+METRICS = ("w_norm", "g_norm", "trust_ratio")
+
+_TAP = threading.local()
+
+
+class _Capture:
+    """Context manager exposing the deposited telemetry as a dict."""
+
+    def __init__(self):
+        self.telemetry: dict[str, Any] = {}
+
+    def __enter__(self) -> dict[str, Any]:
+        stack = getattr(_TAP, "stack", None)
+        if stack is None:
+            stack = _TAP.stack = []
+        stack.append(self.telemetry)
+        return self.telemetry
+
+    def __exit__(self, *exc) -> None:
+        _TAP.stack.pop()
+
+
+def capture() -> _Capture:
+    """Activate the telemetry tap for the enclosed (trace-time) code.
+
+    Nesting is allowed; :func:`deposit` lands in the innermost active
+    capture.  Thread-local, so concurrent traces don't cross-talk.
+    """
+    return _Capture()
+
+
+def active() -> bool:
+    """True when a :func:`capture` context is active on this thread."""
+    return bool(getattr(_TAP, "stack", None))
+
+
+def deposit(telemetry: dict[str, Any]) -> None:
+    """Hand the per-segment telemetry arrays to the innermost capture
+    (no-op when no capture is active — the optimizers call this
+    unconditionally-cheaply via :func:`active`)."""
+    stack = getattr(_TAP, "stack", None)
+    if stack:
+        stack[-1].update(telemetry)
+
+
+# ---------------------------------------------------------------------------
+# host-side record shaping
+# ---------------------------------------------------------------------------
+
+def split_record(host: dict) -> tuple[dict, dict]:
+    """Split a host metrics dict into (non-layerwise, layerwise) parts
+    — the layerwise keys are the ``layerwise/{metric}`` arrays the
+    jitted step emitted."""
+    lw = {k: host[k] for k in host if k.startswith(PREFIX)}
+    rest = {k: v for k, v in host.items() if k not in lw}
+    return rest, lw
+
+
+def expand(layerwise: dict, names: Optional[Sequence[str]]) -> dict:
+    """``{"layerwise/w_norm": (nseg,) array, ...}`` ->
+    ``{"layerwise/{segment}/w_norm": float, ...}``.
+
+    ``names`` are per-segment names in tree-flatten order (from
+    ``repro.core.labels.leaf_names(params)`` — the flat substrate
+    packs segments in exactly this order).  With ``names=None`` the
+    arrays pass through unchanged (JSONL writes them as lists).
+    Raises when a name list's length disagrees with the arrays, since
+    silently mislabelling layers would poison the analysis.
+    """
+    if names is None:
+        return dict(layerwise)
+    out: dict[str, Any] = {}
+    for key, arr in layerwise.items():
+        metric = key[len(PREFIX):]
+        vals = list(arr)
+        if len(vals) != len(names):
+            raise ValueError(
+                f"layerwise telemetry {key!r} has {len(vals)} segments "
+                f"but {len(names)} segment names were provided — the "
+                f"name tree must match the trained param tree")
+        for name, v in zip(names, vals):
+            out[f"{PREFIX}{name}/{metric}"] = float(v)
+    return out
+
+
+class LayerwiseHistory:
+    """Bounded decimating snapshot history for long runs.
+
+    ``add`` keeps every ``stride``-th offered snapshot; when the store
+    exceeds ``capacity`` the stride doubles and existing snapshots are
+    thinned to the new stride — so an arbitrarily long run retains at
+    most ``capacity`` snapshots, spread over its whole duration with a
+    power-of-two step.  ``steps``/``snapshots`` expose what survived.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 2:
+            raise ValueError(f"capacity must be >= 2, got {capacity}")
+        self.capacity = int(capacity)
+        self.stride = 1
+        self._n = 0                      # offers seen
+        self.steps: list[int] = []
+        self.snapshots: list[dict] = []
+
+    def add(self, step: int, layerwise: dict) -> bool:
+        """Offer a snapshot; returns True when it was retained."""
+        offer, self._n = self._n, self._n + 1
+        if offer % self.stride:
+            return False
+        self.steps.append(int(step))
+        self.snapshots.append(dict(layerwise))
+        if len(self.steps) > self.capacity:
+            # thin to the doubled stride: offer indices are
+            # stride-spaced, so keeping every other retained snapshot
+            # is exactly the new stride's schedule
+            self.steps = self.steps[::2]
+            self.snapshots = self.snapshots[::2]
+            self.stride *= 2
+        return True
+
+    def __len__(self) -> int:
+        return len(self.steps)

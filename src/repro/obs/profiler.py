@@ -1,0 +1,86 @@
+"""``jax.profiler`` windowing hooks for the training loops.
+
+The device-side complement of the host span tracer: a
+:class:`StepProfiler` arms ``jax.profiler.start_trace(logdir)`` at a
+chosen step and stops it a fixed number of steps later, so a bounded
+profiler window can be captured from an arbitrarily long run without
+babysitting — wired into ``trainer.fit(..., profiler=...)`` and the
+launcher's ``--profile-dir/--profile-start/--profile-steps`` flags, or
+used programmatically::
+
+    prof = obs.profile(logdir="/tmp/prof", start=10, steps=5)
+    fit(step_fn, state, batches, 100, profiler=prof)
+
+``close()`` (called by the loops in their ``finally``) stops a
+still-open window, so a crash mid-window still flushes the profile.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+
+def _jax_start(logdir: str) -> None:
+    import jax
+    jax.profiler.start_trace(logdir)
+
+
+def _jax_stop() -> None:
+    import jax
+    jax.profiler.stop_trace()
+
+
+class StepProfiler:
+    """Start/stop a profiler trace over the step window
+    ``[start, start + steps)``.
+
+    ``start_fn``/``stop_fn`` default to ``jax.profiler``'s
+    ``start_trace``/``stop_trace`` and are injectable for tests (and
+    for alternative backends).  ``step(i)`` is called once per loop
+    iteration *before* the step's work; the window triggers at most
+    once per profiler instance.
+    """
+
+    def __init__(self, logdir: str, *, start: int = 0, steps: int = 1,
+                 start_fn: Optional[Callable[[str], None]] = None,
+                 stop_fn: Optional[Callable[[], None]] = None):
+        if steps < 1:
+            raise ValueError(f"steps must be >= 1, got {steps}")
+        if start < 0:
+            raise ValueError(f"start must be >= 0, got {start}")
+        self.logdir = logdir
+        self.start = int(start)
+        self.steps = int(steps)
+        self._start_fn = start_fn or _jax_start
+        self._stop_fn = stop_fn or _jax_stop
+        self._running = False
+        self._done = False
+
+    @property
+    def running(self) -> bool:
+        return self._running
+
+    def step(self, i: int) -> None:
+        """Advance the window: arm at ``start``, disarm after the
+        window's last step."""
+        if not self._done and not self._running and i >= self.start:
+            self._start_fn(self.logdir)
+            self._running = True
+        elif self._running and i >= self.start + self.steps:
+            self._stop()
+
+    def _stop(self) -> None:
+        self._running = False
+        self._done = True
+        self._stop_fn()
+
+    def close(self) -> None:
+        """Stop a still-open window (idempotent; loops call this in
+        their ``finally`` so short runs / crashes still flush)."""
+        if self._running:
+            self._stop()
+
+
+def profile(logdir: str, *, start: int = 0, steps: int = 1,
+            **kw) -> StepProfiler:
+    """Programmatic window: ``obs.profile(logdir, start=, steps=)``."""
+    return StepProfiler(logdir, start=start, steps=steps, **kw)

@@ -61,6 +61,8 @@ from repro.diagnostics import hvp as hvp_lib
 from repro.diagnostics import probes as probes_lib
 from repro.diagnostics import sink as sinks
 from repro.models.registry import Model
+from repro.obs import layerwise as obs_layerwise
+from repro.obs import trace as obs_trace
 from repro.training import tasks
 from repro.training.losses import WeightedMean
 from repro.training.train_state import TrainState
@@ -159,7 +161,8 @@ def make_train_step(task: Union[tasks.Task, Model],
                     mesh: Optional[Mesh] = None,
                     data_axes: Optional[tuple] = None,
                     lb_coef: float = 1e-2, z_coef: float = 1e-3,
-                    record_norms: bool = False) -> Callable:
+                    record_norms: bool = False,
+                    layerwise: bool = False) -> Callable:
     """The one step factory: ``(state, batch) -> (state, metrics)``.
 
     ``task``: a :class:`~repro.training.tasks.Task`; a ``Model`` is
@@ -178,6 +181,16 @@ def make_train_step(task: Union[tasks.Task, Model],
     the global-batch gradients, and the fused path keeps its exact
     2-``pallas_call``-per-device invariant. A mesh whose data width is
     1 falls back to the identical single-device body.
+
+    ``layerwise=True`` activates the ``repro.obs.layerwise`` tap around
+    ``optimizer.update`` at trace time: the per-segment ``(w_norm,
+    g_norm, trust_ratio)`` triples the layer-wise optimizers already
+    materialize become extra jitted-step outputs under
+    ``layerwise/{metric}`` (each a ``(nseg,)`` f32 array) — zero extra
+    ``pallas_call``s, no sync points; under ``fit(...,
+    async_metrics=N)`` they ride the MetricRing like every metric.
+    Host-side naming/decimation is ``fit``'s ``layerwise_every`` /
+    ``layerwise_names`` / ``layerwise_history``.
 
     The returned step also accepts the batch splatted as positional args
     (``step(state, images, labels)``), matching the legacy per-workload
@@ -211,11 +224,19 @@ def make_train_step(task: Union[tasks.Task, Model],
             raise ValueError(
                 f"task {task.name!r} metrics {sorted(clash)} collide with "
                 f"trainer-reserved metric names")
-        updates, opt_state = optimizer.update(grads, state.opt_state,
-                                              state.params)
+        if layerwise:
+            with obs_layerwise.capture() as tap:
+                updates, opt_state = optimizer.update(
+                    grads, state.opt_state, state.params)
+        else:
+            tap = {}
+            updates, opt_state = optimizer.update(grads, state.opt_state,
+                                                  state.params)
         params = apply_updates(state.params, updates)
         metrics = {"loss": loss, **task_metrics,
                    "grad_norm": instrumentation.global_norm(grads)}
+        for k, v in tap.items():
+            metrics[f"{obs_layerwise.PREFIX}{k}"] = v
         if record_norms:
             # on the accumulated grads: Fig. 2 traces see the global batch
             metrics["layer_norms"] = instrumentation.layer_norms(
@@ -267,12 +288,18 @@ class MetricRing:
     order, so interleaved train/probe/recorder records resolve in the
     same sequence the synchronous loop would have produced.  ``drain``
     resolves everything still in flight (end of run).
+
+    ``tracer=`` records a ``resolve`` span around each entry's
+    ``device_get`` — the single point the host waits on the device, and
+    the number that shows how far ahead the dispatch loop runs.
     """
 
-    def __init__(self, window: int):
+    def __init__(self, window: int, *,
+                 tracer: Optional["obs_trace.Tracer"] = None):
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
         self.window = int(window)
+        self._tracer = obs_trace.NULL if tracer is None else tracer
         self._ring: collections.deque = collections.deque()
 
     def __len__(self) -> int:
@@ -288,7 +315,10 @@ class MetricRing:
 
     def _pop(self) -> None:
         step, values, emit, last = self._ring.popleft()
-        emit(step, jax.device_get(values), last)
+        with self._tracer.span("resolve", step=step,
+                               in_flight=len(self._ring) + 1):
+            host = jax.device_get(values)
+        emit(step, host, last)
 
     def drain(self) -> None:
         """Resolve every in-flight entry (the end-of-run barrier)."""
@@ -312,7 +342,13 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
         callbacks: Sequence = (),
         controller=None,
         async_metrics: Union[bool, int] = False,
-        close_sink: bool = False) -> tuple[TrainState, list[dict]]:
+        close_sink: bool = False,
+        tracer: Optional["obs_trace.Tracer"] = None,
+        profiler=None,
+        layerwise_every: int = 0,
+        layerwise_names: Optional[Sequence[str]] = None,
+        layerwise_history: Optional["obs_layerwise.LayerwiseHistory"] = None,
+        ) -> tuple[TrainState, list[dict]]:
     """Host loop used by CPU-scale experiments. ``batches`` yields one
     pytree per *global* step: dict batches (LM) or tuples
     (classifier/SSL args); for an accumulating step the leaves carry the
@@ -368,7 +404,31 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
     ``close_sink=True`` closes ``sink`` after the final write (the
     default-constructed console sink is always closed); leave False
     when the caller owns the sink (e.g. a ``with JsonlSink(...)``
-    block or a sink reused across fits)."""
+    block or a sink reused across fits).
+
+    Observability (``repro.obs``):
+
+    * ``tracer=`` — a :class:`repro.obs.trace.Tracer`; the loop records
+      ``data_wait`` (blocking on the batch iterator), ``dispatch`` (the
+      jitted step call — async dispatch, so this is host-side cost, not
+      device time), ``resolve`` (the MetricRing's per-entry
+      ``device_get``, or the synchronous path's per-step one),
+      ``probe`` / ``controller`` spans.  Export the ring afterwards
+      with ``tracer.export(sink)`` / render with
+      ``tools/render_trace.py``.
+    * ``profiler=`` — a :class:`repro.obs.profiler.StepProfiler`
+      (``obs.profile(logdir, start=, steps=)``); ``profiler.step(i)``
+      runs each iteration and ``close()`` fires in the ``finally``.
+    * ``layerwise_every=N`` — decimate the ``layerwise/*`` arrays a
+      ``layerwise=True`` train step emits: records keep them only every
+      N-th step (0/1 = every step; other steps' records carry just the
+      scalar metrics).  Decimation is host-side, so the jitted step's
+      signature — and the fused 2-``pallas_call`` invariant — never
+      changes.  ``layerwise_names=`` (e.g.
+      ``labels.leaf_names(params)``) expands the arrays to
+      ``layerwise/{segment}/{metric}`` scalars;
+      ``layerwise_history=`` additionally offers each kept snapshot to
+      a :class:`repro.obs.LayerwiseHistory`."""
     if controller is not None:
         if train_step is not None:
             raise ValueError(
@@ -388,7 +448,9 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
         close_sink = close_sink or sink is not None
     if async_metrics is True:
         async_metrics = max(log_every, 1) if log_every else 8
-    ring = MetricRing(int(async_metrics)) if async_metrics else None
+    tracer = obs_trace.NULL if tracer is None else tracer
+    ring = MetricRing(int(async_metrics), tracer=tracer) \
+        if async_metrics else None
     history: list[dict] = []
 
     def emit_train(step, host_metrics, last, step_batch_size=None):
@@ -397,6 +459,15 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
             # adaptive runs: every record carries the batch it trained
             # at (the static sink field would go stale across switches)
             host["global_batch"] = float(step_batch_size)
+        rest, lw = obs_layerwise.split_record(host)
+        if lw:
+            if layerwise_every > 1 and step % layerwise_every:
+                host = rest
+            else:
+                expanded = obs_layerwise.expand(lw, layerwise_names)
+                host = {**rest, **expanded}
+                if layerwise_history is not None:
+                    layerwise_history.add(step, expanded)
         history.append(host)
         if sink is not None:
             sink.write(step, host, last=last)
@@ -410,18 +481,22 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
 
     try:
         for i in range(num_steps):
+            if profiler is not None:
+                profiler.step(i)
             # read the target BEFORE the pull: controller retargets
             # land at the next pull, so this is the batch this step
             # trains at
             step_batch_size = controller.global_batch \
                 if controller is not None else None
-            batch = next(batches)
+            with tracer.span("data_wait", step=i):
+                batch = next(batches)
             fn = controller.step_fn() if controller is not None \
                 else step_fn
-            if isinstance(batch, dict):
-                state, metrics = fn(state, batch)
-            else:
-                state, metrics = fn(state, *batch)
+            with tracer.span("dispatch", step=i):
+                if isinstance(batch, dict):
+                    state, metrics = fn(state, batch)
+                else:
+                    state, metrics = fn(state, *batch)
             ln = metrics.pop("layer_norms", None)
             last = i == num_steps - 1
             if ring is None:
@@ -429,8 +504,9 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
                     recorder.record(i, ln)
                 # scalars -> python floats; non-scalar task metrics
                 # (e.g. per-class vectors) as host numpy arrays
-                emit_train(i, jax.device_get(metrics), last,
-                           step_batch_size)
+                with tracer.span("resolve", step=i):
+                    host_metrics = jax.device_get(metrics)
+                emit_train(i, host_metrics, last, step_batch_size)
             else:
                 if recorder is not None and ln is not None:
                     ring.append(
@@ -449,15 +525,22 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
                     prepare(i, state)
                 if not probes_lib.probe_due(probe, i):
                     continue
+                span_name = "controller" if probe is controller \
+                    else "probe"
                 if ring is not None and hasattr(probe, "dispatch") \
                         and hasattr(probe, "resolve") \
                         and probe is not controller:
-                    raw = probe.dispatch(i, state)
+                    with tracer.span(span_name, step=i,
+                                     probe=getattr(probe, "name", "?"),
+                                     mode="dispatch"):
+                        raw = probe.dispatch(i, state)
                     ring.append(i, raw,
                                 lambda s, v, l, _p=probe:
                                     emit_probe(s, _p.resolve(v), l, _p))
                 else:
-                    out = probe(i, state)
+                    with tracer.span(span_name, step=i,
+                                     probe=getattr(probe, "name", "?")):
+                        out = probe(i, state)
                     if ring is None:
                         emit_probe(i, out, True, probe)
                     else:
@@ -469,6 +552,8 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
         if ring is not None:
             ring.drain()
     finally:
+        if profiler is not None:
+            profiler.close()
         if close_sink and sink is not None:
             sink.close()
     return state, history

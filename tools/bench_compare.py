@@ -1,0 +1,147 @@
+"""Bench regression gate: diff two ``bench/v2`` JSON artifacts.
+
+Compares a freshly generated ``BENCH_*.json`` against a committed
+baseline (``benchmarks/baselines/``), entry by entry (matched on
+``name``), and exits nonzero when any metric regressed past its
+relative threshold — so a kernel perf regression fails the build
+instead of surfacing weeks later in a trajectory plot.
+
+Default metric: ``us_per_call`` (lower is better), threshold
+``--threshold 0.5`` — i.e. fail only on a >50% slowdown.  Wall-clock
+benches on shared CI runners are noisy, so the default gate is loose
+and the CI step that runs this is advisory (``continue-on-error``);
+tighten ``--threshold`` on dedicated hardware.  ``--metric`` may be
+repeated (``--metric us_per_call --metric bytes``); per-metric
+thresholds via ``--metric name=0.1``.
+
+Entries present in only one file are reported (new entries are
+informational; entries MISSING from the candidate fail, since a
+silently dropped bench is itself a regression).  Host blocks
+(backend / git SHA / jax versions) are printed so a diff across
+machines is recognizable as such.
+
+Usage:
+    python tools/bench_compare.py benchmarks/baselines/BENCH_kernels.json \
+        experiments/bench/BENCH_kernels.json --threshold 0.5
+
+Exit codes: 0 = within thresholds; 1 = regression (or missing
+entries/unreadable files).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_METRIC = "us_per_call"
+DEFAULT_THRESHOLD = 0.5
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    schema = doc.get("schema")
+    if schema != "bench/v2":
+        raise ValueError(f"{path}: schema is {schema!r}, expected "
+                         f"'bench/v2'")
+    if not isinstance(doc.get("entries"), list):
+        raise ValueError(f"{path}: missing 'entries' list")
+    return doc
+
+
+def parse_metrics(specs: list[str],
+                  default: float = DEFAULT_THRESHOLD) -> dict[str, float]:
+    """``["us_per_call", "bytes=0.1"]`` -> {metric: threshold};
+    metrics without an explicit ``=THRESHOLD`` get ``default``."""
+    out: dict[str, float] = {}
+    for spec in specs:
+        name, sep, thr = spec.partition("=")
+        out[name] = float(thr) if sep else default
+    return out
+
+
+def compare(baseline: dict, candidate: dict,
+            metrics: dict[str, float]) -> tuple[list[str], list[str]]:
+    """Returns ``(failures, notes)`` line lists."""
+    base = {e["name"]: e for e in baseline["entries"]}
+    cand = {e["name"]: e for e in candidate["entries"]}
+    failures: list[str] = []
+    notes: list[str] = []
+    for name in base:
+        if name not in cand:
+            failures.append(f"MISSING  {name}: in baseline but not in "
+                            f"candidate")
+            continue
+        for metric, threshold in metrics.items():
+            b, c = base[name].get(metric), cand[name].get(metric)
+            if not isinstance(b, (int, float)) \
+                    or not isinstance(c, (int, float)) \
+                    or isinstance(b, bool) or isinstance(c, bool):
+                continue       # metric absent on this entry — skip
+            if b <= 0:
+                continue       # no meaningful relative change
+            rel = (c - b) / b
+            line = (f"{name} {metric}: {b:g} -> {c:g} "
+                    f"({rel:+.1%}, threshold +{threshold:.0%})")
+            if rel > threshold:
+                failures.append(f"REGRESS  {line}")
+            else:
+                notes.append(f"ok       {line}")
+    for name in cand:
+        if name not in base:
+            notes.append(f"new      {name}: not in baseline")
+    return failures, notes
+
+
+def _host_line(doc: dict) -> str:
+    h = doc.get("host", {})
+    sha = h.get("git_sha", "?")
+    return (f"backend={h.get('backend', '?')} jax={h.get('jax', '?')} "
+            f"sha={sha[:12] if isinstance(sha, str) else sha}"
+            f"{' (dirty)' if h.get('git_dirty') else ''}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed bench/v2 JSON")
+    ap.add_argument("candidate", help="freshly generated bench/v2 JSON")
+    ap.add_argument("--metric", action="append", default=None,
+                    metavar="NAME[=THRESHOLD]",
+                    help=f"metric to gate (repeatable; default "
+                         f"{DEFAULT_METRIC}={DEFAULT_THRESHOLD})")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="relative-regression threshold applied to "
+                         "metrics without their own =THRESHOLD "
+                         f"(default {DEFAULT_THRESHOLD} = fail on "
+                         f">{DEFAULT_THRESHOLD:.0%} slowdown)")
+    args = ap.parse_args(argv)
+
+    default = DEFAULT_THRESHOLD if args.threshold is None \
+        else args.threshold
+    metrics = parse_metrics(args.metric or [DEFAULT_METRIC], default)
+
+    try:
+        baseline = load(args.baseline)
+        candidate = load(args.candidate)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench_compare: FAIL {e}", file=sys.stderr)
+        return 1
+
+    print(f"baseline : {args.baseline} [{_host_line(baseline)}]")
+    print(f"candidate: {args.candidate} [{_host_line(candidate)}]")
+    failures, notes = compare(baseline, candidate, metrics)
+    for line in notes:
+        print(line)
+    for line in failures:
+        print(f"bench_compare: {line}", file=sys.stderr)
+    if failures:
+        print(f"bench_compare: FAIL ({len(failures)} regressions)",
+              file=sys.stderr)
+        return 1
+    print(f"bench_compare: OK ({len(notes)} comparisons within "
+          f"thresholds)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,13 @@
 #   4d. async launcher smoke (--prefetch 2 --async-metrics 4) + the
 #      pipeline bench quick run — writes BENCH_pipeline.json (overlap
 #      ratio, metric parity, bucketing pad waste)
+#   4e. observability tier (-m obs): span tracer + trace-v1 schema,
+#      layerwise telemetry oracle parity + 2-pallas_call invariant,
+#      <=3% tracing overhead budget, render/report/bench-gate tools
+#   4f. traced launcher smoke (--trace-out --layerwise-every) +
+#      Perfetto render + trace-v1 schema validation + bench gate vs
+#      the committed benchmarks/baselines/BENCH_kernels.json
+#      (advisory: || true — wall-clock noise must not fail check)
 #   5. multidevice: mesh-native numerics on 8 fabricated CPU devices
 #      (shard_map train-step parity, DP controller (D,K) retargeting,
 #      cross-mesh checkpoint round-trips; the GSPMD-parity subprocess
@@ -63,6 +70,25 @@ python -m repro.launch.train --smoke --steps 2 --seq 64 \
 echo "== pipeline bench quick run (experiments/bench/BENCH_pipeline.json) =="
 PYTHONPATH="src:.:$PYTHONPATH" python benchmarks/bench_pipeline.py --quick
 
+echo "== observability tier (-m obs: tracer, trace-v1 schema, layerwise telemetry, overhead budget) =="
+python -m pytest -q -m obs
+
+echo "== traced launcher smoke (--trace-out + --layerwise-every) =="
+python -m repro.launch.train --smoke --steps 3 --seq 64 \
+    --global-batch 8 --microbatch 2 --use-kernel fused --log-every 1 \
+    --metrics-out experiments/bench/smoke_obs_launcher.jsonl \
+    --trace-out experiments/bench/smoke_trace.jsonl \
+    --layerwise-every 2
+python tools/render_trace.py experiments/bench/smoke_trace.jsonl \
+    -o experiments/bench/smoke_trace.perfetto.json
+python tools/validate_metrics.py experiments/bench/smoke_trace.jsonl \
+    --min-trace-records 9
+
+echo "== bench regression gate (advisory: compares against committed baseline) =="
+python tools/bench_compare.py benchmarks/baselines/BENCH_kernels.json \
+    experiments/bench/BENCH_kernels.json || \
+    echo "bench_compare: ADVISORY failure (wall-clock noise is expected off dedicated hardware)"
+
 echo "== multidevice (8 fabricated CPU devices: shard_map parity, DP controller, sharded ckpts; GSPMD parity ran in tier 1) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest -q tests/test_mesh_train.py
@@ -84,6 +110,8 @@ python tools/validate_metrics.py \
     experiments/bench/smoke_launcher.jsonl \
     experiments/bench/smoke_async_launcher.jsonl \
     experiments/bench/smoke_mesh_launcher.jsonl \
-    experiments/bench/probe_smoke.jsonl
+    experiments/bench/smoke_obs_launcher.jsonl \
+    experiments/bench/probe_smoke.jsonl \
+    experiments/bench/trace_smoke.jsonl
 
 echo "check: OK"

@@ -1,0 +1,122 @@
+"""Summarize a run's observability output on the terminal.
+
+Two reports, both off the JSONL files the launcher already writes:
+
+* **Phase breakdown** (``--trace trace.jsonl``): aggregates the
+  trace-v1 span records (``repro.obs.trace.phase_summary``) into a
+  per-phase ``count / total_ms / mean_us / max_us`` table — the
+  one-glance answer to "is this run input-bound, dispatch-bound, or
+  resolve-bound?".
+
+* **Sharpest trust-ratio layers** (``--metrics run.jsonl``): scans the
+  ``layerwise/{segment}/trust_ratio`` stream (``--layerwise-every`` on
+  the launcher / ``layerwise_names`` on ``fit``) and ranks segments by
+  how far their LAST trust ratio sits from 1.0 — the layers LARS is
+  throttling or boosting hardest, i.e. where the paper's layerwise
+  analysis says to look first.  ``--top-k`` bounds the table.
+
+Usage:
+    python tools/obs_report.py \
+        --trace /tmp/trace.jsonl --metrics /tmp/run.jsonl --top-k 5
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import pathlib
+import sys
+
+# repro.obs.trace is pure stdlib; load it by file path so this tool
+# stays dependency-free (no PYTHONPATH, and no jax import via the
+# repro.obs package __init__).
+_TRACE_PY = (pathlib.Path(__file__).resolve().parents[1]
+             / "src" / "repro" / "obs" / "trace.py")
+_spec = importlib.util.spec_from_file_location("_obs_trace", _TRACE_PY)
+_trace_mod = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_trace_mod)
+phase_summary = _trace_mod.phase_summary
+
+# deliberate jax-free copy of repro.obs.layerwise.PREFIX (same
+# pattern as TRACE_KINDS in diagnostics/sink.py); test_obs pins them
+# equal.
+PREFIX = "layerwise/"
+
+
+def _read_jsonl(path: str) -> list[dict]:
+    records = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                records.append(json.loads(line))
+    return records
+
+
+def report_phases(records: list[dict]) -> list[str]:
+    summary = phase_summary(records)
+    if not summary:
+        return ["no span records"]
+    lines = [f"{'phase':<16} {'count':>7} {'total_ms':>10} "
+             f"{'mean_us':>10} {'max_us':>10}"]
+    for name, s in sorted(summary.items(),
+                          key=lambda kv: -kv[1]["total_ms"]):
+        lines.append(f"{name:<16} {s['count']:>7d} {s['total_ms']:>10.3f} "
+                     f"{s['mean_us']:>10.1f} {s['max_us']:>10.1f}")
+    return lines
+
+
+def sharpest_layers(records: list[dict], top_k: int) -> list[tuple]:
+    """``(segment, last trust_ratio, |ratio - 1|)`` rows, sharpest
+    first — from the expanded ``layerwise/{segment}/trust_ratio``
+    keys' final value per segment."""
+    last: dict[str, float] = {}
+    suffix = "/trust_ratio"
+    for rec in records:
+        for k, v in rec.items():
+            if k.startswith(PREFIX) and k.endswith(suffix) \
+                    and isinstance(v, (int, float)):
+                last[k[len(PREFIX):-len(suffix)]] = float(v)
+    rows = [(seg, r, abs(r - 1.0)) for seg, r in last.items()]
+    rows.sort(key=lambda t: -t[2])
+    return rows[:top_k]
+
+
+def report_layers(records: list[dict], top_k: int) -> list[str]:
+    rows = sharpest_layers(records, top_k)
+    if not rows:
+        return ["no layerwise/{segment}/trust_ratio keys (run with "
+                "--layerwise-every N / layerwise_names=)"]
+    lines = [f"{'segment':<40} {'trust_ratio':>12} {'|r-1|':>10}"]
+    for seg, ratio, dist in rows:
+        lines.append(f"{seg:<40} {ratio:>12.6f} {dist:>10.6f}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default=None,
+                    help="trace-v1 JSONL for the phase breakdown")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics JSONL for the trust-ratio ranking")
+    ap.add_argument("--top-k", type=int, default=10,
+                    help="how many sharpest layers to list (default 10)")
+    args = ap.parse_args(argv)
+    if args.trace is None and args.metrics is None:
+        ap.error("pass --trace and/or --metrics")
+
+    if args.trace is not None:
+        print(f"== phase breakdown ({args.trace}) ==")
+        for line in report_phases(_read_jsonl(args.trace)):
+            print(line)
+    if args.metrics is not None:
+        if args.trace is not None:
+            print()
+        print(f"== sharpest trust-ratio layers ({args.metrics}, "
+              f"top {args.top_k}) ==")
+        for line in report_layers(_read_jsonl(args.metrics), args.top_k):
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

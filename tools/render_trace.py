@@ -1,0 +1,101 @@
+"""Render a trace-v1 JSONL as a Chrome/Perfetto trace.
+
+Converts the span/instant/counter records a
+:class:`repro.obs.trace.Tracer` exported (``--trace-out`` on the
+launcher, or ``tracer.export(JsonlSink(...))`` anywhere) into the
+Chrome trace event format — open the output at https://ui.perfetto.dev
+or ``chrome://tracing`` to see the run's host timeline: ``data_wait``
+vs ``dispatch`` vs ``resolve`` per step, producer-thread ``produce``
+spans overlapping the consumer, probe/controller work, and counter
+tracks.
+
+Mapping: each distinct ``tid`` (recording thread name) becomes a
+Chrome thread with a ``thread_name`` metadata event; spans -> complete
+events (``ph: "X"``), instants -> ``ph: "i"`` (thread scope),
+counters -> ``ph: "C"``.  The record's extra attrs (step, probe, ...)
+land in ``args`` so the UI shows them on click.
+
+Stdlib-only on purpose — runs anywhere the JSONL landed, no jax
+needed.
+
+Usage:
+    python tools/render_trace.py trace.jsonl -o trace.perfetto.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_BASE_KEYS = ("trace", "kind", "name", "ts_us", "dur_us", "tid", "step",
+              "value")
+
+
+def _args_of(rec: dict) -> dict:
+    out = {k: v for k, v in rec.items() if k not in _BASE_KEYS}
+    if "step" in rec:
+        out["step"] = rec["step"]
+    return out
+
+
+def convert(records: list[dict], *, pid: int = 1) -> list[dict]:
+    """trace-v1 record dicts -> Chrome trace event list."""
+    tids: dict[str, int] = {}
+    events: list[dict] = []
+    for rec in records:
+        if rec.get("trace") != "v1":
+            continue
+        tid_name = str(rec.get("tid", "main"))
+        tid = tids.setdefault(tid_name, len(tids) + 1)
+        base = {"name": rec["name"], "pid": pid, "tid": tid,
+                "ts": rec["ts_us"]}
+        kind = rec.get("kind")
+        if kind == "span":
+            events.append({**base, "ph": "X", "dur": rec["dur_us"],
+                           "args": _args_of(rec)})
+        elif kind == "instant":
+            events.append({**base, "ph": "i", "s": "t",
+                           "args": _args_of(rec)})
+        elif kind == "counter":
+            events.append({**base, "ph": "C",
+                           "args": {rec["name"]: rec["value"]}})
+    meta = [{"ph": "M", "pid": pid, "tid": tid, "name": "thread_name",
+             "args": {"name": tid_name}}
+            for tid_name, tid in tids.items()]
+    return meta + events
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="trace-v1 JSONL (from Tracer.export)")
+    ap.add_argument("-o", "--out", required=True,
+                    help="output Chrome/Perfetto JSON path")
+    args = ap.parse_args(argv)
+
+    records = []
+    with open(args.trace) as f:
+        for lineno, line in enumerate(f, 1):
+            if not line.strip():
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                print(f"render_trace: {args.trace}:{lineno}: bad JSON: "
+                      f"{e}", file=sys.stderr)
+                return 1
+    events = convert(records)
+    n_spans = sum(1 for e in events if e.get("ph") == "X")
+    if not any(e.get("ph") in ("X", "i", "C") for e in events):
+        print(f"render_trace: {args.trace}: no trace-v1 records found",
+              file=sys.stderr)
+        return 1
+    with open(args.out, "w") as f:
+        json.dump({"traceEvents": events,
+                   "displayTimeUnit": "ms"}, f)
+    print(f"render_trace: {args.out}: {len(events)} events "
+          f"({n_spans} spans) — open at https://ui.perfetto.dev")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

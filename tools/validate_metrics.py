@@ -3,7 +3,11 @@
 Runs ``repro.diagnostics.sink.validate_jsonl`` over metrics files (or
 globs) so schema drift in ``MetricsSink`` fails the build instead of a
 downstream notebook: every line must be a JSON object with an int
-``step`` and only scalar/str/bool/list values.
+``step`` and only scalar/str/bool/list values.  Lines carrying
+``"trace": "v1"`` (a ``repro.obs.trace.Tracer`` export) are
+additionally held to the trace-v1 span/instant/counter rules;
+``--min-trace-records`` asserts a file actually contains a timeline
+(e.g. the launcher's ``--trace-out`` output in CI).
 
 Usage (from the repo root, after the smoke runs have written traces):
 
@@ -28,6 +32,9 @@ def main(argv=None) -> int:
                     help="JSONL files or glob patterns to validate")
     ap.add_argument("--min-records", type=int, default=1,
                     help="fail any file with fewer records (default 1)")
+    ap.add_argument("--min-trace-records", type=int, default=0,
+                    help="fail any file with fewer trace-v1 records "
+                         "(default 0 = no trace requirement)")
     ap.add_argument("--allow-empty", action="store_true",
                     help="exit 0 when no file matches any pattern")
     args = ap.parse_args(argv)
@@ -52,7 +59,7 @@ def main(argv=None) -> int:
     failed = False
     for path in files:
         try:
-            n = validate_jsonl(path)
+            n, n_trace = validate_jsonl(path, counts=True)
         except ValueError as e:
             print(f"validate_metrics: FAIL {e}", file=sys.stderr)
             failed = True
@@ -61,8 +68,14 @@ def main(argv=None) -> int:
             print(f"validate_metrics: FAIL {path}: {n} records "
                   f"< --min-records {args.min_records}", file=sys.stderr)
             failed = True
+        elif n_trace < args.min_trace_records:
+            print(f"validate_metrics: FAIL {path}: {n_trace} trace "
+                  f"records < --min-trace-records "
+                  f"{args.min_trace_records}", file=sys.stderr)
+            failed = True
         else:
-            print(f"validate_metrics: OK {path} ({n} records)")
+            print(f"validate_metrics: OK {path} ({n} records, "
+                  f"{n_trace} trace)")
     return 1 if failed else 0
 
 
