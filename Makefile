@@ -1,5 +1,5 @@
-.PHONY: check test fast bench bench-pipeline overlap obs smoke lint \
-	multidevice
+.PHONY: check test fast bench bench-pipeline overlap obs serving \
+	serve-bench smoke lint multidevice
 
 # tier-1 suite + REPRO_FORCE_REF=1 oracle re-run (both dispatch modes)
 # + e2e launcher smoke with gradient accumulation (K>1) + probe smoke
@@ -44,6 +44,19 @@ overlap:
 # <=3% tracing overhead budget) + render/report/bench-gate tools
 obs:
 	PYTHONPATH=src python -m pytest -q -m obs
+
+# serving tier: continuous-batching engine == per-request generate
+# (greedy, staggered arrivals), batched prefill == token-by-token
+# oracle, zero decode recompiles across occupancy changes, paged KV
+# reuse after eviction, mesh-restored weights serve identically
+serving:
+	PYTHONPATH=src python -m pytest -q -m serving
+
+# serving engine bench: saturated continuous batching vs sequential
+# per-request generate (>=1.5x tokens/sec floor) + open-loop Poisson
+# latency percentiles; writes BENCH_serve.json
+serve-bench:
+	PYTHONPATH=src:. python benchmarks/bench_serve.py
 
 # end-to-end CPU smoke of the launcher: global batch 8 = 4 accumulated
 # microbatches of 2, optimizer applied once per global step — then the

@@ -76,7 +76,8 @@ def run_fixed(opt_name: str, *, steps: int = STEPS) -> tuple[float, str]:
     with sink_lib.JsonlSink(path, static={"run": opt_name,
                                           "global_batch": BATCH_MAX}) as s:
         state, _ = fit(make_train_step(task, opt), state,
-                       batch_iterator(DATA, BATCH_MAX), steps, sink=s)
+                       batch_iterator(DATA, BATCH_MAX), steps,
+                       options=FitOptions(sink=s))
     sink_lib.validate_jsonl(path)
     return _eval_accuracy(state.params), path
 
@@ -101,8 +102,8 @@ def run_adaptive(*, steps: int = STEPS) -> tuple[float, str,
                                 microbatch=MICROBATCH, accum_steps=1)
     path = _path("adaptive")
     with sink_lib.JsonlSink(path, static={"run": "adaptive"}) as s:
-        state, _ = fit(None, state, stream, steps, sink=s,
-                       controller=ctrl)
+        state, _ = fit(None, state, stream, steps,
+                       options=FitOptions(sink=s, controller=ctrl))
     sink_lib.validate_jsonl(path)
     return _eval_accuracy(state.params), path, ctrl
 

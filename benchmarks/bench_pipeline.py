@@ -58,7 +58,7 @@ from repro.diagnostics import BufferedSink, LanczosProbe
 from repro.diagnostics import sink as sink_lib
 from repro.kernels.ops import count_pallas_calls
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
-from repro.training import TrainState, classifier_task, fit
+from repro.training import FitOptions, TrainState, classifier_task, fit
 from repro.training.trainer import make_train_step
 
 BATCH = 256
@@ -109,9 +109,10 @@ def run(step, opt, params, probe, *, steps: int, sync: bool,
         sink = BufferedSink(base)
     t0 = time.perf_counter()
     try:
-        _, history = fit(step, state, stream, steps, sink=sink,
-                         callbacks=[probe],
-                         async_metrics=False if sync else RING)
+        _, history = fit(step, state, stream, steps,
+                         options=FitOptions(
+                             sink=sink, callbacks=[probe],
+                             async_metrics=False if sync else RING))
     finally:
         sink.close()
         if isinstance(stream, PrefetchingStream):

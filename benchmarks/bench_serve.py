@@ -1,0 +1,179 @@
+"""Serving engine bench: continuous batching vs sequential generate.
+
+Three measurements on a reduced dense LM (CPU-friendly), all at EQUAL
+output length per request:
+
+* ``serve_sequential`` — the no-batching baseline: one request at a
+  time through a pre-jitted prefill + decode loop (warmed per prompt
+  shape, so the number is service time, not tracing overhead).
+* ``serve_engine`` — the same requests submitted to the
+  :class:`repro.serving.Engine` all at once (saturated): peak
+  multiplexed throughput; ``speedup`` is engine vs sequential
+  tokens/sec and the acceptance floor is >= 1.5x.
+* ``serve_poisson`` — open-loop Poisson arrivals at ~70% of the
+  engine's saturated request rate: per-request latency p50/p99 (ms)
+  under load, the serving-facing number.
+
+Writes ``experiments/bench/BENCH_serve.json`` (bench/v2); the
+committed ``benchmarks/baselines/BENCH_serve.json`` feeds
+``tools/bench_compare.py`` in CI (advisory, like the kernel gate).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import serving
+from repro.configs import get_smoke_config
+from repro.models import get_model
+
+ARCH = "qwen2.5-3b"
+PROMPT_LENS = (4, 6, 8, 12)
+SPEEDUP_FLOOR = 1.5
+
+
+def make_requests(n: int, vocab: int):
+    rng = np.random.RandomState(0)
+    return [rng.randint(1, vocab, size=PROMPT_LENS[i % len(PROMPT_LENS)])
+            .astype(np.int32) for i in range(n)]
+
+
+def sequential_baseline(model, params, prompts, num_tokens, max_len):
+    """Per-request service loop: batched prefill (jitted per prompt
+    shape) + one-token decode steps, no cross-request batching."""
+    pfill = jax.jit(model.prefill, static_argnums=(2,))
+    step = jax.jit(model.decode_step)
+
+    def run_one(prompt):
+        s = prompt.size
+        logits, cache = pfill(params, jnp.asarray(prompt[None]), max_len)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [int(tok[0, 0])]
+        for i in range(num_tokens - 1):
+            logits, cache = step(params, cache, tok, jnp.int32(s + i))
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(int(tok[0, 0]))
+        return out
+
+    for ln in sorted({p.size for p in prompts}):       # warm per shape
+        run_one(prompts[[p.size for p in prompts].index(ln)])
+    t0 = time.perf_counter()
+    outs = [run_one(p) for p in prompts]
+    elapsed = time.perf_counter() - t0
+    return outs, elapsed
+
+
+def saturated_engine(model, params, sc, prompts, num_tokens):
+    eng = serving.Engine(model, params, sc)
+    # warm every compile path (prefill buckets + the one decode step)
+    for p in prompts[: sc.prefill_batch]:
+        eng.submit(p, max_new_tokens=2)
+    eng.drain()
+    t0 = time.perf_counter()
+    ids = [eng.submit(p, max_new_tokens=num_tokens) for p in prompts]
+    eng.drain()
+    elapsed = time.perf_counter() - t0
+    outs = [eng.result(rid).tokens for rid in ids]
+    return outs, elapsed, eng
+
+
+def poisson_engine(model, params, sc, prompts, num_tokens, rate_rps):
+    """Open-loop: arrival times drawn up front (Exp(1/rate) gaps), each
+    request submitted when the wall clock passes its arrival."""
+    eng = serving.Engine(model, params, sc)
+    # warm every (count, length) prefill bucket reachable at this load,
+    # so the latency percentiles measure serving, not XLA compiles
+    c = 1
+    while c <= sc.prefill_batch:
+        for ln in (min(PROMPT_LENS), max(PROMPT_LENS)):
+            for _ in range(c):
+                eng.submit(np.ones(ln, np.int32), max_new_tokens=2)
+            eng.drain()
+        c *= 2
+    eng.drain()
+    gaps = np.random.RandomState(1).exponential(1.0 / rate_rps,
+                                                size=len(prompts))
+    arrivals = np.cumsum(gaps)
+    done: list = []
+    pending = list(zip(arrivals, prompts))
+    t0 = time.perf_counter()
+    while pending or eng.active_count or eng.queue_depth:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            eng.submit(pending.pop(0)[1], max_new_tokens=num_tokens)
+        if eng.active_count or eng.queue_depth:
+            done.extend(eng.step())
+        elif pending:
+            time.sleep(min(0.001, pending[0][0] - now))
+    elapsed = time.perf_counter() - t0
+    lat_ms = sorted(1e3 * r.latency_s for r in done)
+    p50 = lat_ms[len(lat_ms) // 2]
+    p99 = lat_ms[min(len(lat_ms) - 1, int(0.99 * len(lat_ms)))]
+    return elapsed, p50, p99, sum(len(r.tokens) for r in done)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sizing (fewer requests / tokens)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--num-tokens", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    n = args.requests or (8 if args.quick else 16)
+    num_tokens = args.num_tokens or (8 if args.quick else 16)
+
+    cfg = get_smoke_config(ARCH)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sc = serving.ServeConfig(slots=args.slots, max_len=32, page_size=8,
+                             prefill_batch=args.slots)
+    prompts = make_requests(n, cfg.vocab_size)
+    total = n * num_tokens
+
+    seq_out, seq_s = sequential_baseline(model, params, prompts,
+                                         num_tokens, sc.max_len)
+    eng_out, eng_s, eng = saturated_engine(model, params, sc, prompts,
+                                           num_tokens)
+    assert eng_out == seq_out, \
+        "engine tokens diverged from sequential generate"
+    assert eng.decode_compilations == 1, eng.stats()
+
+    seq_tps, eng_tps = total / seq_s, total / eng_s
+    speedup = eng_tps / seq_tps
+    common.record("serve_sequential", 1e6 * seq_s / total,
+                  tokens_per_s=round(seq_tps, 1), requests=n,
+                  num_tokens=num_tokens)
+    common.record("serve_engine", 1e6 * eng_s / total,
+                  tokens_per_s=round(eng_tps, 1),
+                  speedup=round(speedup, 2), slots=sc.slots,
+                  decode_compilations=eng.decode_compilations,
+                  prefill_compilations=eng.prefill_compilations)
+
+    rate = 0.7 * (n / eng_s)
+    po_s, p50, p99, po_toks = poisson_engine(model, params, sc, prompts,
+                                             num_tokens, rate)
+    common.record("serve_poisson", 1e6 * po_s / po_toks,
+                  tokens_per_s=round(po_toks / po_s, 1),
+                  rate_rps=round(rate, 2), p50_ms=round(p50, 1),
+                  p99_ms=round(p99, 1), requests=n)
+
+    path = common.write_json(
+        "BENCH_serve", suite="serve",
+        extra={"arch": ARCH, "slots": sc.slots, "max_len": sc.max_len,
+               "page_size": sc.page_size, "num_tokens": num_tokens,
+               "speedup_floor": SPEEDUP_FLOOR})
+    print(f"wrote {path}")
+    assert speedup >= SPEEDUP_FLOOR, (
+        f"continuous batching speedup {speedup:.2f}x below the "
+        f"{SPEEDUP_FLOOR}x acceptance floor")
+    print(f"speedup {speedup:.2f}x >= {SPEEDUP_FLOOR}x: OK")
+
+
+if __name__ == "__main__":
+    main()

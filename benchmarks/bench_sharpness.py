@@ -34,7 +34,7 @@ from repro.data.synthetic import batch_iterator
 from repro.diagnostics import LanczosProbe, SharpnessProbe, hvp
 from repro.diagnostics import sink as sink_lib
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
-from repro.training import TrainState, classifier_task, fit
+from repro.training import FitOptions, TrainState, classifier_task, fit
 from repro.training.trainer import make_train_step
 
 BATCH = 256
@@ -67,14 +67,14 @@ def run_one(opt_name: str, *, steps: int = STEPS):
     with sink_lib.JsonlSink(path,
                             static={"optimizer": opt_name}) as sink:
         state, _ = fit(make_train_step(task, opt), state,
-                       batch_iterator(DATA, BATCH), steps, sink=sink,
-                       callbacks=[
+                       batch_iterator(DATA, BATCH), steps,
+                       options=FitOptions(sink=sink, callbacks=[
                            LanczosProbe(task, probe_batch,
                                         every=PROBE_EVERY,
                                         num_iters=LANCZOS_ITERS, top_k=1),
                            SharpnessProbe(task, probe_batch,
                                           every=PROBE_EVERY),
-                       ])
+                       ]))
     sink_lib.validate_jsonl(path)
     return path, state, task, probe_batch
 

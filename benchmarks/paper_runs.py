@@ -14,7 +14,8 @@ from repro.data.synthetic import (ClassificationData, batch_iterator,
                                   two_view_batch)
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
 from repro.training.train_state import TrainState
-from repro.training.trainer import (fit, make_classifier_step,
+from repro.training.trainer import (FitOptions, fit,
+                                    make_classifier_step,
                                     make_ssl_step)
 
 BASE_BATCH = 64
@@ -41,7 +42,7 @@ def run_classification(opt_name: str, batch_size: int, lr: float, *,
                                 record_norms=record_norms)
     rec = NormRecorder(params) if record_norms else None
     state, hist = fit(step, state, batch_iterator(DATA, batch_size), steps,
-                      recorder=rec)
+                      options=FitOptions(recorder=rec))
     xe, ye = DATA.eval_set(2048)
     acc = float(jnp.mean(jnp.argmax(
         apply_mlp_classifier(state.params, xe), -1) == ye))

@@ -13,7 +13,8 @@ from repro.core import NormRecorder, build_optimizer
 from repro.data.synthetic import ClassificationData, batch_iterator
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
 from repro.training.train_state import TrainState
-from repro.training.trainer import fit, make_classifier_step
+from repro.training.trainer import (FitOptions, fit,
+                                    make_classifier_step)
 
 BATCH, BASE, STEPS, LR = 1024, 64, 200, 1.0
 DATA = ClassificationData(num_classes=32, noise_scale=4.0,
@@ -31,7 +32,7 @@ for opt_name in ("wa-lars", "nowa-lars", "lamb", "tvlars"):
     rec = NormRecorder(params)
     print(f"\n=== {opt_name} (B={BATCH}, γ_target={LR}) ===")
     state, hist = fit(step, state, batch_iterator(DATA, BATCH), STEPS,
-                      recorder=rec, log_every=50)
+                      options=FitOptions(recorder=rec, log_every=50))
     xe, ye = DATA.eval_set(2048)
     acc = float(jnp.mean(jnp.argmax(
         apply_mlp_classifier(state.params, xe), -1) == ye))

@@ -9,7 +9,7 @@ from repro.core import build_optimizer
 from repro.data.synthetic import lm_batch
 from repro.models import get_model
 from repro.training.train_state import TrainState
-from repro.training.trainer import fit, make_train_step
+from repro.training.trainer import FitOptions, fit, make_train_step
 
 STEPS = 30
 
@@ -38,7 +38,8 @@ def batches():
         i += 1
 
 
-state, history = fit(train_step, state, batches(), STEPS, log_every=5)
+state, history = fit(train_step, state, batches(), STEPS,
+                     options=FitOptions(log_every=5))
 assert history[-1]["loss"] < history[0]["loss"]
 print(f"\nloss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f} "
       f"in {STEPS} steps — quickstart OK")

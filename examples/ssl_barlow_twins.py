@@ -13,7 +13,8 @@ from repro.data.synthetic import (ClassificationData, batch_iterator,
                                   two_view_batch)
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
 from repro.training.train_state import TrainState
-from repro.training.trainer import fit, make_classifier_step, make_ssl_step
+from repro.training.trainer import (FitOptions, fit,
+                                    make_classifier_step, make_ssl_step)
 
 BATCH, STEPS = 512, 120
 DATA = ClassificationData(num_classes=32, noise_scale=4.0, image_size=8,
@@ -35,7 +36,8 @@ for opt_name in ("wa-lars", "tvlars"):
                                  BATCH)
             i[0] += 1
 
-    state, hist = fit(ssl_step, state, views(), STEPS, log_every=40)
+    state, hist = fit(ssl_step, state, views(), STEPS,
+                      options=FitOptions(log_every=40))
     backbone = state.params
 
     # linear probe (CLF stage: SGD + cosine, Appendix B)

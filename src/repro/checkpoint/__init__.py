@@ -1,1 +1,5 @@
-"""repro.checkpoint"""
+"""repro.checkpoint — sharding-aware pytree checkpoints."""
+from repro.checkpoint.checkpoint import (latest_step, restore, save,
+                                         saved_shardings)
+
+__all__ = ["latest_step", "restore", "save", "saved_shardings"]

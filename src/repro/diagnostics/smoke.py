@@ -28,7 +28,8 @@ from repro.data.synthetic import ClassificationData, batch_iterator
 from repro.diagnostics import probes, sink as sink_lib
 from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
 from repro.obs import trace as obs_trace
-from repro.training import TrainState, classifier_task, fit
+from repro.training import (FitOptions, TrainState, classifier_task,
+                            fit)
 from repro.training.trainer import make_train_step
 
 
@@ -46,13 +47,13 @@ def run(out_dir: str, *, steps: int = 4, probe_every: int = 2,
     tracer = obs_trace.Tracer()
     with sink_lib.JsonlSink(path, static={"run": "smoke"}) as sink:
         fit(make_train_step(task, opt), state,
-            batch_iterator(data, 16), steps, sink=sink, tracer=tracer,
-            callbacks=[
+            batch_iterator(data, 16), steps,
+            options=FitOptions(sink=sink, tracer=tracer, callbacks=[
                 probes.LanczosProbe(task, probe_batch, every=probe_every,
                                     num_iters=num_iters, top_k=1),
                 probes.SharpnessProbe(task, probe_batch,
                                       every=probe_every),
-            ])
+            ]))
 
     n = sink_lib.validate_jsonl(path)
     expected_probe_steps = len(range(0, steps, probe_every))

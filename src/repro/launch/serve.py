@@ -1,7 +1,14 @@
-"""Serving launcher: batched prefill + decode on the host mesh.
+"""Serving launcher: continuous-batching engine on the host mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b \
-        --smoke --batch 4 --prompt-len 16 --num-tokens 32
+        --smoke --requests 8 --prompt-len 16 --num-tokens 32
+
+Builds a :class:`repro.serving.Engine` (fixed-slot decode batch, paged
+KV cache, batched prefill admission), submits an open set of requests
+— half up front, half injected mid-flight to exercise continuous
+batching — and reports throughput plus the engine's compile/page
+accounting. ``--restore DIR`` loads weights through the sharding-aware
+checkpoint reader onto the requested mesh instead of initialising.
 """
 from __future__ import annotations
 
@@ -10,22 +17,27 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import serving
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.launch import sharding
 from repro.launch.mesh import make_host_mesh
 from repro.models import extra_embed_shape, get_model
-from repro.models import layers as layers_lib
-from repro.serving.decode import make_serve_step
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2.5-3b", choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--num-tokens", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--restore", default=None,
+                    help="checkpoint dir to restore params from")
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args()
@@ -34,53 +46,58 @@ def main() -> None:
     model = get_model(cfg)
     mesh = make_host_mesh(args.data_parallel, args.model_parallel)
     max_len = args.prompt_len + args.num_tokens
+    pages = -(-max_len // args.page_size)
+    sc = serving.ServeConfig(
+        slots=args.slots, max_len=pages * args.page_size,
+        page_size=args.page_size, prefill_batch=args.slots,
+        sampling=serving.SamplingParams(temperature=args.temperature))
 
-    rng = jax.random.PRNGKey(0)
+    extra = None
+    es = extra_embed_shape(cfg, sc.slots)
+    if es is not None:
+        extra = jnp.zeros(es, cfg.cdtype)  # stubbed modality frontend
+
     with mesh:
-        if mesh.size > 1:
-            layers_lib.set_batch_sharding(
-                ("data",) if args.batch % args.data_parallel == 0 else None,
-                model_size=args.model_parallel, mesh=mesh)
-        params = model.init(rng)
-        if mesh.size > 1:
-            params_sh = sharding.named(
-                mesh, sharding.state_pspecs(mesh, jax.eval_shape(
-                    lambda: params)))
-            params = jax.device_put(params, params_sh)
+        if args.restore:
+            eng = serving.Engine.from_checkpoint(
+                args.restore, model, sc,
+                mesh=mesh if mesh.size > 1 else None, extra=extra)
+        else:
+            params = model.init(jax.random.PRNGKey(0))
+            if mesh.size > 1:
+                params_sh = sharding.named(
+                    mesh, sharding.state_pspecs(mesh, jax.eval_shape(
+                        lambda: params)))
+                params = jax.device_put(params, params_sh)
+            eng = serving.Engine(model, params, sc, extra=extra)
 
-        extra = None
-        es = extra_embed_shape(cfg, args.batch)
-        if es is not None:
-            extra = jnp.zeros(es, cfg.cdtype)
-        prompt = jax.random.randint(jax.random.fold_in(rng, 1),
-                                    (args.batch, args.prompt_len), 0,
-                                    cfg.vocab_size)
-        cache = model.init_cache(params, args.batch, max_len, extra)
-        step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(1, cfg.vocab_size, size=args.prompt_len)
+                   for _ in range(args.requests)]
+        head, tail = prompts[:len(prompts) // 2], prompts[len(prompts) // 2:]
 
-        # prefill token-by-token (cache-consistent reference prefill)
-        tok = prompt[:, :1]
-        t0 = time.time()
-        for t in range(args.prompt_len):
-            tok, cache = step(params, cache, prompt[:, t:t + 1],
-                              jnp.int32(t))
-        t_prefill = time.time() - t0
+        t0 = time.perf_counter()
+        for p in head:
+            eng.submit(p, max_new_tokens=args.num_tokens)
+        results = []
+        for _ in range(3):                    # in-flight injection
+            results.extend(eng.step())
+        for p in tail:
+            eng.submit(p, max_new_tokens=args.num_tokens)
+        results.extend(eng.drain())
+        elapsed = time.perf_counter() - t0
 
-        out = []
-        t0 = time.time()
-        for i in range(args.num_tokens):
-            out.append(tok)
-            tok, cache = step(params, cache, tok,
-                              jnp.int32(args.prompt_len + i))
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
-
-    gen = jnp.concatenate(out, axis=1)
-    tps = args.batch * args.num_tokens / t_decode
-    print(f"{args.arch}: prefill {args.prompt_len} toks in "
-          f"{t_prefill:.2f}s; decoded {args.num_tokens} toks/seq × "
-          f"{args.batch} seqs in {t_decode:.2f}s ({tps:.1f} tok/s)")
-    print("sample:", list(map(int, gen[0, :16])))
+    toks = sum(len(r.tokens) for r in results)
+    stats = eng.stats()
+    print(f"{args.arch}: {len(results)} requests, {toks} tokens in "
+          f"{elapsed:.2f}s ({toks / elapsed:.1f} tok/s) — "
+          f"slots={sc.slots} max_len={sc.max_len} "
+          f"page_size={sc.page_size}")
+    print(f"decode compiled {stats['decode_compilations']}x, prefill "
+          f"{stats['prefill_compilations']}x; pages: "
+          f"{stats['allocations']} allocs, {stats['reused_pages']} "
+          f"reused")
+    print("sample:", results[0].tokens[:16])
 
 
 if __name__ == "__main__":

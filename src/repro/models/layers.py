@@ -338,8 +338,14 @@ def attention(params: dict, cfg: ModelConfig, x: jnp.ndarray,
               positions: jnp.ndarray, mask: Optional[jnp.ndarray],
               kv_src: Optional[jnp.ndarray] = None,
               use_rope: bool = True,
-              kv_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Self-attention when kv_src is None, else cross-attention."""
+              kv_positions: Optional[jnp.ndarray] = None,
+              return_kv: bool = False):
+    """Self-attention when kv_src is None, else cross-attention.
+
+    ``return_kv=True`` additionally returns the (rope'd) K and V
+    [B,T,Hkv,Dh] — exactly the tensors ``attention_decode`` writes into
+    its cache, so a full-sequence forward can dump a decode-ready KV
+    cache (the serving engine's single-shot batched prefill)."""
     cross = kv_src is not None
     kv_in = kv_src if cross else x
     q, k, v = _qkv(params, x, kv_in, cfg)
@@ -349,15 +355,30 @@ def attention(params: dict, cfg: ModelConfig, x: jnp.ndarray,
         k = rope(k, kpos, cfg.rope_theta)
     q = shard_seq_q(q)
     out = gqa_scores_apply(q, k, v, mask)
-    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _write_row(cache: jnp.ndarray, new: jnp.ndarray,
+               slots: jnp.ndarray) -> jnp.ndarray:
+    """Per-batch cache write: cache [B,T,...], new [B,1,...], slots [B]."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
+            c, n, s, axis=0))(cache, new.astype(cache.dtype), slots)
 
 
 def attention_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
                      k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      pos: jnp.ndarray, *, window: Optional[int] = None,
                      use_rope: bool = True):
-    """One-token decode. x: [B,1,D]; caches [B,T,Hkv,Dh]; pos: scalar —
-    the index to write (= number of tokens already cached).
+    """One-token decode. x: [B,1,D]; caches [B,T,Hkv,Dh]; pos: scalar
+    (all rows at the same depth — the training-era path) OR a [B] int32
+    vector of per-row depths — the serving engine's continuous-batching
+    path, where every slot of the decode batch is mid-way through a
+    different request. ``pos`` is the index to write (= number of
+    tokens already cached) for each row.
 
     For windowed layers the cache is a ring buffer of size ``window``
     (write slot = pos % window) and RoPE uses absolute positions.
@@ -365,26 +386,40 @@ def attention_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
     """
     b = x.shape[0]
     t = k_cache.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    vec = pos.ndim == 1                   # per-row positions
     q, k, v = _qkv(params, x, x, cfg)
-    posb = jnp.full((b, 1), pos, jnp.int32)
+    posb = pos[:, None] if vec else jnp.full((b, 1), pos, jnp.int32)
     if use_rope:
         q = rope(q, posb, cfg.rope_theta)
         k = rope(k, posb, cfg.rope_theta)
     slot = pos % t if window is not None else pos
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k.astype(k_cache.dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    if vec:
+        k_cache = _write_row(k_cache, k, slot)
+        v_cache = _write_row(v_cache, v, slot)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), slot, axis=1)
     kpos = jnp.arange(t)
+    if vec:
+        kpos = kpos[None, :]              # [1,T] vs pos/slot [B,1]
+        pos_c, slot_c = pos[:, None], slot[:, None]
+    else:
+        pos_c, slot_c = pos, slot
     if window is not None:
         # ring buffer: slot i holds absolute position i + T*floor stuff;
         # valid iff its absolute position in (pos-window, pos].
-        wraps = (pos // t) * t
-        abs_pos = kpos + jnp.where(kpos <= slot, wraps, wraps - t)
-        ok = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+        wraps = (pos_c // t) * t
+        abs_pos = kpos + jnp.where(kpos <= slot_c, wraps, wraps - t)
+        ok = (abs_pos >= 0) & (abs_pos <= pos_c) \
+            & (abs_pos > pos_c - window)
     else:
-        ok = kpos <= pos
-    mask = jnp.where(ok, 0.0, NEG_INF)[None, None, None, :]
+        ok = kpos <= pos_c
+    # scalar pos: ok is [T] -> [1,1,1,T]; vector pos: [B,T] -> [B,1,1,T]
+    mask = jnp.where(ok, 0.0, NEG_INF)
+    mask = mask[:, None, None, :] if vec else mask[None, None, None, :]
     out = gqa_scores_apply(q, k_cache.astype(q.dtype),
                            v_cache.astype(q.dtype), mask)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))

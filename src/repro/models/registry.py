@@ -8,6 +8,14 @@ architecture:
     logits, aux = model.apply(params, batch)          # batch: dict
     cache = model.init_cache(params, batch_size, max_len, extra)
     logits, cache = model.decode_step(params, cache, tokens, pos)
+    logits, cache = model.prefill(params, tokens, max_len, extra, lens)
+
+``decode_step``'s ``pos`` is a scalar (all rows at the same depth) or a
+[B] vector of per-row depths — the serving engine's continuous-batching
+decode. ``prefill`` is the single-shot batched prefill (one
+full-sequence forward + KV-cache dump); it is ``None`` for families
+without a batched-prefill lowering (ssm/hybrid/encdec fall back to the
+token-by-token reference loop in ``repro.serving.decode``).
 
 ``batch["tokens"]`` [B,S] always; ``batch["extra_embeds"]`` carries the
 stubbed modality frontend output (image patches for vlm, audio frames
@@ -31,6 +39,10 @@ class Model(NamedTuple):
     decode_step: Callable     # (params, cache, tokens, pos) -> (logits, cache)
     loss: Callable            # (params, batch) -> (mean CE, aux) — fused
                               # chunked CE head, never materialises logits
+    prefill: Optional[Callable] = None
+                              # (params, tokens, max_len, extra) ->
+                              # (logits [B,S,V], cache); None = family
+                              # has no batched-prefill lowering
 
 
 def _needs_extra(cfg: ModelConfig) -> bool:
@@ -46,10 +58,12 @@ def extra_embed_shape(cfg: ModelConfig, batch: int) -> Optional[tuple]:
 
 
 def get_model(cfg: ModelConfig) -> Model:
+    prefill_fn = None
     if cfg.family in ("dense", "moe", "vlm"):
         init_fn, apply_fn = T.init_lm, T.apply_lm
         hidden_fn = T.apply_lm_hidden
         cache_fn, decode_fn = T.init_lm_cache, T.decode_lm
+        prefill_fn = T.apply_lm_prefill
     elif cfg.family == "ssm":
         init_fn, apply_fn = H.init_ssm_lm, H.apply_ssm_lm
         hidden_fn = H.apply_ssm_lm_hidden
@@ -89,4 +103,11 @@ def get_model(cfg: ModelConfig) -> Model:
     def decode_step(params, cache, tokens, pos):
         return decode_fn(cfg, params, cache, tokens, pos)
 
-    return Model(cfg, init, apply, init_cache, decode_step, loss)
+    prefill = None
+    if prefill_fn is not None:
+        def prefill(params, tokens, max_len, extra=None, lens=None):
+            return prefill_fn(cfg, params, tokens, max_len, extra,
+                              lens)
+
+    return Model(cfg, init, apply, init_cache, decode_step, loss,
+                 prefill)

@@ -110,6 +110,26 @@ def layer_decode(params: dict, cfg: ModelConfig, h: jnp.ndarray,
     return h, new_k, new_v
 
 
+def layer_apply_kv(params: dict, cfg: ModelConfig, h: jnp.ndarray,
+                   positions: jnp.ndarray, mask, kind: str = "attn",
+                   kv_src: Optional[jnp.ndarray] = None):
+    """``layer_apply`` that also returns the layer's (rope'd) K/V —
+    the prefill forward's cache dump. MoE aux losses are dropped
+    (inference path). Returns (h, (k, v))."""
+    a, kv = L.attention(params["attn"], cfg,
+                        L.norm(cfg, params["norm1"], h),
+                        positions, mask, kv_src=kv_src,
+                        use_rope=(kind != "cross"), return_kv=True)
+    if kind == "cross":
+        a = jnp.tanh(params["gate"]).astype(a.dtype) * a
+    h = h + a
+    x = L.norm(cfg, params["norm2"], h)
+    if "moe" in params:
+        y, _ = M.moe_apply(params["moe"], cfg, x)
+        return h + y, kv
+    return h + L.mlp(params["mlp"], cfg, x), kv
+
+
 def cross_kv_from_embeds(params: dict, cfg: ModelConfig,
                          embeds: jnp.ndarray):
     """Precompute cross-attention K/V from (image/encoder) embeddings."""
@@ -283,11 +303,101 @@ def init_lm_cache(cfg: ModelConfig, params: dict, batch: int, max_len: int,
     return cache
 
 
+def _prefill_cache_layout(cfg: ModelConfig, kind: str, k: jnp.ndarray,
+                          v: jnp.ndarray, max_len: int,
+                          lens: Optional[jnp.ndarray] = None) -> dict:
+    """[G,B,S,...] prefill K/V -> the ``init_lm_cache`` layout at
+    ``max_len``: global layers zero-pad the sequence axis to T=max_len;
+    local (sliding-window) layers gather each ROW's last
+    ``min(lens[b], window)`` tokens into their ring slots (p % T_local)
+    — byte-identical to what streaming that row's prompt through
+    ``attention_decode`` leaves behind. ``lens`` [B] gives per-row
+    prompt lengths for right-padded batches (None = every row is the
+    full S); global layers need no masking because decode writes each
+    new key at the row's depth BEFORE attending, so pad-position keys
+    are overwritten or masked, never read."""
+    g, b, s, hkv, hd = k.shape
+    if kind == "local" and cfg.sliding_window:
+        t = min(cfg.sliding_window, max_len)
+        last = (jnp.full((b,), s, jnp.int32) if lens is None
+                else lens.astype(jnp.int32))[:, None] - 1   # [B,1]
+        # ring slot q holds the LARGEST position p <= last with
+        # p % t == q (exactly what decode's abs_pos arithmetic assumes)
+        q = jnp.arange(t, dtype=jnp.int32)[None, :]         # [1,T]
+        p = last - ((last - q) % t)                         # [B,T]
+        valid = (p >= 0)[None, :, :, None, None]
+        idx = jnp.clip(p, 0, s - 1)[None, :, :, None, None]
+        kc = jnp.where(valid, jnp.take_along_axis(
+            k, jnp.broadcast_to(idx, (g, b, t, 1, 1)), axis=2), 0)
+        vc = jnp.where(valid, jnp.take_along_axis(
+            v, jnp.broadcast_to(idx, (g, b, t, 1, 1)), axis=2), 0)
+        return {"k": kc, "v": vc}
+    pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+    return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+
+
+def apply_lm_prefill(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+                     max_len: int,
+                     extra_embeds: Optional[jnp.ndarray] = None,
+                     lens: Optional[jnp.ndarray] = None
+                     ) -> tuple[jnp.ndarray, dict]:
+    """Single-shot batched prefill: ONE full-sequence forward that also
+    dumps a decode-ready KV cache (the production path ``prefill_32k``
+    lowers) — replacing the O(seq_len) token-by-token reference loop.
+    tokens: [B,S]. Returns (logits [B,S,V], cache) where ``cache``
+    matches ``init_lm_cache(..., max_len)`` after streaming the prompt
+    through ``decode_lm`` (the parity-tested oracle). Right-padded
+    prompts are safe: pad positions sit causally after every real
+    token, and decode masks key positions beyond each row's depth —
+    pass ``lens`` [B] so sliding-window layers ring-pack each row's
+    own last ``window`` tokens instead of the padded suffix."""
+    groups, kinds = _group_spec(cfg)
+    b, s = tokens.shape
+    if s > max_len:
+        raise ValueError(f"prompt length {s} exceeds cache max_len "
+                         f"{max_len}")
+    h = L.embed(params["embed"], cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    masks = {"global": ("causal", None),
+             "local": ("causal", cfg.sliding_window)
+             if cfg.sliding_window else None}
+    kv_src = extra_embeds.astype(h.dtype) if extra_embeds is not None \
+        else None
+
+    def body(h, group_params):
+        kvs = {}
+        for i, kind in enumerate(kinds):
+            name = f"l{i}_{kind}"
+            mask = masks["local"] if kind == "local" else masks["global"]
+            h, kvs[name] = layer_apply_kv(
+                group_params[name], cfg, h, positions,
+                None if kind == "cross" else mask, kind,
+                kv_src if kind == "cross" else None)
+        return h, kvs
+
+    # plain scan (no remat — inference): ys stack each layer's per-group
+    # K/V to [G, B, S, Hkv, Dh]
+    h, kvs = jax.lax.scan(body, h, params["groups"])
+    cache: dict[str, Any] = {}
+    for i, kind in enumerate(kinds):
+        name = f"l{i}_{kind}"
+        k, v = kvs[name]
+        if kind == "cross":
+            cache[name] = {"ck": k, "cv": v}
+        else:
+            cache[name] = _prefill_cache_layout(cfg, kind, k, v,
+                                                max_len, lens)
+    h = L.norm(cfg, params["final_norm"], h)
+    return L.unembed(params["embed"], cfg, h), cache
+
+
 def decode_lm(cfg: ModelConfig, params: dict, cache: dict,
               tokens: jnp.ndarray, pos: jnp.ndarray
               ) -> tuple[jnp.ndarray, dict]:
-    """One-token step. tokens: [B,1]; pos: scalar int32 (tokens cached so
-    far). Returns (logits [B,1,V], new cache)."""
+    """One-token step. tokens: [B,1]; pos: scalar int32 (tokens cached
+    so far) or a [B] vector of per-row depths (the serving engine's
+    continuous-batching path — see ``layers.attention_decode``).
+    Returns (logits [B,1,V], new cache)."""
     groups, kinds = _group_spec(cfg)
     h = L.embed(params["embed"], cfg, tokens)
 

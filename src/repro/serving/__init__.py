@@ -1,1 +1,41 @@
-"""repro.serving"""
+"""repro.serving — the one public serving surface.
+
+Everything a consumer needs lives here; launchers, examples, benches
+and tests import ``repro.serving`` only, never the submodules:
+
+    from repro import serving
+
+    cfg = serving.ServeConfig(slots=8, max_len=256,
+                              sampling=serving.SamplingParams())
+    eng = serving.Engine(model, params, cfg)          # or .from_checkpoint
+    rid = eng.submit([1, 2, 3], max_new_tokens=16)
+    for res in eng.drain():
+        print(res.id, res.tokens)
+
+``generate`` / ``prefill`` are the single-request building blocks (and
+the bench baseline); ``prefill_reference`` is the token-by-token parity
+oracle. ``PagedKVCache`` / ``PageTable`` are exported for tests and
+introspection — the engine owns them in normal use.
+"""
+from repro.serving.decode import (generate, make_serve_step, prefill,
+                                  prefill_reference)
+from repro.serving.engine import (Engine, Request, RequestResult,
+                                  ServeConfig)
+from repro.serving.kv_cache import PagedKVCache, PageTable, pages_for
+from repro.serving.sampling import SamplingParams, make_sampler
+
+__all__ = [
+    "Engine",
+    "PageTable",
+    "PagedKVCache",
+    "Request",
+    "RequestResult",
+    "SamplingParams",
+    "ServeConfig",
+    "generate",
+    "make_sampler",
+    "make_serve_step",
+    "pages_for",
+    "prefill",
+    "prefill_reference",
+]

@@ -1,9 +1,18 @@
 """Serving: batched prefill + autoregressive decode with KV caches.
 
-``make_serve_step`` builds the ONE-token step the decode input shapes
-(decode_32k / long_500k) lower: new token + seq_len-deep cache.
-``generate`` is the host loop used by the serving example and tests
-(greedy or temperature sampling).
+``prefill`` is single-shot: ONE full-sequence ``model.prefill`` forward
+that emits both the last-position logits and the populated KV cache —
+O(1) device calls instead of the O(seq_len) token-by-token loop. The
+old loop survives as ``prefill_reference``, the oracle the serving
+test tier checks the batched path against (exact for dense /
+windowed-attention families; MoE capacity routing makes drops depend
+on the padded sequence length, so its parity holds at equal padding —
+see ``tests/test_serving.py``).
+
+``generate`` is the per-request host loop used by the serving example,
+the bench baseline, and the engine-parity tests. The continuous-
+batching scheduler that multiplexes many requests over one decode step
+lives in :mod:`repro.serving.engine`.
 """
 from __future__ import annotations
 
@@ -26,18 +35,33 @@ def make_serve_step(model: Model) -> Callable:
     return serve_step
 
 
-def prefill(model: Model, params, tokens: jnp.ndarray, max_len: int,
-            extra_embeds=None):
-    """Fill the cache by streaming the prompt token-by-token (reference
-    implementation; production prefill uses model.apply + cache dump,
-    which is what prefill_32k lowers)."""
+def prefill_reference(model: Model, params, tokens: jnp.ndarray,
+                      max_len: int, extra_embeds=None):
+    """Token-by-token prefill: stream the prompt through decode_step.
+
+    O(seq_len) device calls — kept ONLY as the parity oracle for the
+    batched ``prefill``; never use it on a serving path."""
     b, s = tokens.shape
     cache = model.init_cache(params, b, max_len, extra_embeds)
     last = None
     for t in range(s):
-        last, cache = model.decode_step(params, cache, tokens[:, t:t + 1],
-                                        jnp.int32(t))
+        last, cache = model.decode_step(params, cache,
+                                        tokens[:, t:t + 1], jnp.int32(t))
     return last, cache
+
+
+def prefill(model: Model, params, tokens: jnp.ndarray, max_len: int,
+            extra_embeds=None):
+    """Batched prefill: (last-position logits [B,1,V], cache).
+
+    One full-sequence forward + KV dump via ``model.prefill`` when the
+    family has the lowering; falls back to the reference loop for
+    families without one (ssm / hybrid / encdec)."""
+    if model.prefill is None:
+        return prefill_reference(model, params, tokens, max_len,
+                                 extra_embeds)
+    logits, cache = model.prefill(params, tokens, max_len, extra_embeds)
+    return logits[:, -1:], cache
 
 
 def generate(model: Model, params, prompt: jnp.ndarray, *,

@@ -1,0 +1,147 @@
+"""Paged KV cache for the serving engine.
+
+The device memory is ONE fixed allocation — the model cache for
+``slots`` rows at ``max_len`` tokens, created once when the engine
+starts — organised as a pool of fixed-size *pages* (``page_size``
+tokens each; slot ``s`` owns the contiguous physical page range
+``[s·P, (s+1)·P)`` where ``P = max_len // page_size``). A host-side
+:class:`PageTable` tracks which pages are live: pages are allocated
+lazily as a request's sequence grows across page boundaries, and
+released — returned to the pool and reused by later requests without
+any reallocation or zeroing — when the request finishes or is evicted.
+
+No zeroing is needed on reuse because stale keys are unreachable by
+construction: the decode attention masks every cache position beyond
+the slot's current depth (``kpos <= pos``), so whatever a previous
+tenant left in a page is never attended; admission overwrites the
+whole slot row with the new request's prefill dump. This invariant is
+what the ``serving`` test tier's page-reuse test pins.
+
+Slot occupancy never changes any device shape: the cache pytree the
+jitted decode step sees is always ``[slots, max_len]`` per layer —
+admit/evict/finish only move host-side page accounting and which rows
+the engine reads tokens from.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` cache entries."""
+    return max(0, -(-tokens // page_size))
+
+
+class PageTable:
+    """Host-side page accounting over the fixed device pool.
+
+    Page ids are global: slot ``s``'s j-th page is ``s * pages_per_slot
+    + j``. ``ensure`` grows a slot's allocation to cover a sequence
+    length (lazy, page-at-a-time); ``release`` frees a slot's pages
+    back to the pool. ``reused_pages`` counts allocations of a page
+    that some earlier request already used and freed — the direct
+    evidence of slot/page reuse after eviction.
+    """
+
+    def __init__(self, slots: int, pages_per_slot: int, page_size: int):
+        self.slots = slots
+        self.pages_per_slot = pages_per_slot
+        self.page_size = page_size
+        self.total_pages = slots * pages_per_slot
+        self._used = [0] * slots          # live pages per slot
+        self._freed: set[int] = set()     # page ids freed at least once
+        self.reused_pages = 0
+        self.allocations = 0
+
+    def _page_id(self, slot: int, j: int) -> int:
+        return slot * self.pages_per_slot + j
+
+    def ensure(self, slot: int, tokens: int) -> list[int]:
+        """Grow ``slot``'s allocation to cover ``tokens`` cache
+        entries; returns the newly allocated page ids (empty when the
+        current pages already cover it)."""
+        need = pages_for(tokens, self.page_size)
+        if need > self.pages_per_slot:
+            raise ValueError(
+                f"slot {slot}: {tokens} tokens need {need} pages but a "
+                f"slot holds {self.pages_per_slot} "
+                f"(max_len {self.pages_per_slot * self.page_size})")
+        new = []
+        for j in range(self._used[slot], need):
+            pid = self._page_id(slot, j)
+            if pid in self._freed:
+                self.reused_pages += 1
+            self.allocations += 1
+            new.append(pid)
+        self._used[slot] = max(self._used[slot], need)
+        return new
+
+    def release(self, slot: int) -> list[int]:
+        """Free all of ``slot``'s pages back to the pool."""
+        freed = [self._page_id(slot, j)
+                 for j in range(self._used[slot])]
+        self._freed.update(freed)
+        self._used[slot] = 0
+        return freed
+
+    def pages_used(self, slot: Optional[int] = None) -> int:
+        if slot is not None:
+            return self._used[slot]
+        return sum(self._used)
+
+    @property
+    def free_pages(self) -> int:
+        return self.total_pages - self.pages_used()
+
+    def stats(self) -> dict:
+        return {"total_pages": self.total_pages,
+                "live_pages": self.pages_used(),
+                "free_pages": self.free_pages,
+                "allocations": self.allocations,
+                "reused_pages": self.reused_pages}
+
+
+class PagedKVCache:
+    """The device cache pool + its page table + the slot-insert op.
+
+    ``insert`` copies one prefilled request row into one slot of the
+    pool — a pair of dynamic slice/update ops jitted once per prefill
+    batch shape (the *decode* step never sees any of this; its
+    signature is occupancy-independent by construction).
+    """
+
+    def __init__(self, model, params, config, extra=None):
+        self.table = PageTable(config.slots,
+                               config.max_len // config.page_size,
+                               config.page_size)
+        self.cache = model.init_cache(params, config.slots,
+                                      config.max_len, extra)
+        self._insert_fns: dict = {}
+
+    def insert(self, prefill_cache, src: int, dst: int) -> None:
+        """Copy batch row ``src`` of ``prefill_cache`` into slot
+        ``dst`` of the pool (device-side, jitted; ``src``/``dst`` are
+        traced scalars so occupancy changes never retrace)."""
+        shape_key = tuple(
+            leaf.shape
+            for leaf in jax.tree_util.tree_leaves(prefill_cache))
+        fn = self._insert_fns.get(shape_key)
+        if fn is None:
+            fn = jax.jit(_insert_row)
+            self._insert_fns[shape_key] = fn
+        self.cache = fn(self.cache, prefill_cache,
+                        jnp.int32(src), jnp.int32(dst))
+
+
+def _insert_row(cache, prefill_cache, src, dst):
+    """Leaves are [G, B, T, ...] (batch on axis 1 for every layer
+    family, including the vlm cross ck/cv)."""
+    def put(big, small):
+        row = jax.lax.dynamic_slice_in_dim(small, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, row.astype(big.dtype), dst, axis=1)
+
+    return jax.tree_util.tree_map(put, cache, prefill_cache)

@@ -1,0 +1,57 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k.
+
+``SamplingParams`` is the static half (it rides inside ``ServeConfig``
+and is closed over at jit time — changing it means a new engine, never
+a new jit signature); the per-call randomness arrives as an explicit
+PRNG key so the engine's decode step stays a pure function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """temperature == 0.0 -> greedy argmax (top_k ignored);
+    temperature > 0 -> categorical over logits/temperature, optionally
+    restricted to the ``top_k`` highest-logit tokens (0 = no cap)."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+def make_sampler(params: SamplingParams) -> Callable:
+    """``(logits [N, V], key) -> tokens [N] int32``, jit-safe.
+
+    All branches are resolved HERE (python-level, on the frozen
+    params), so the closure traces to a fixed computation — the
+    engine's compile-once discipline extends through sampling.
+    """
+    if params.temperature == 0.0:
+        def greedy(logits: jnp.ndarray, key) -> jnp.ndarray:
+            del key
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy
+
+    temp = params.temperature
+    top_k = params.top_k
+
+    def sample(logits: jnp.ndarray, key) -> jnp.ndarray:
+        lg = logits.astype(jnp.float32) / temp
+        if top_k and top_k < lg.shape[-1]:
+            kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+    return sample

@@ -7,11 +7,13 @@ from repro.training.controller import (AdaptiveBatchController,
 from repro.training.losses import WeightedMean
 from repro.training.tasks import Task, classifier_task, lm_task, ssl_task
 from repro.training.train_state import TrainState
-from repro.training.trainer import (fit, make_classifier_step,
+from repro.training.trainer import (FitOptions, fit,
+                                    make_classifier_step,
                                     make_ssl_step, make_train_step)
 
 __all__ = [
-    "AdaptiveBatchController", "ControllerConfig", "Task", "TrainState",
+    "AdaptiveBatchController", "ControllerConfig", "FitOptions", "Task",
+    "TrainState",
     "WeightedMean", "classifier_task", "decide_global_batch", "fit",
     "lm_task", "make_classifier_step", "make_ssl_step", "make_train_step",
     "snap_accum_steps", "ssl_task",

@@ -46,6 +46,8 @@ global batch. ``fit`` optionally records the full per-layer traces.
 from __future__ import annotations
 
 import collections
+import dataclasses
+import warnings
 from typing import Callable, Optional, Sequence, Union
 
 import jax
@@ -333,21 +335,67 @@ def _to_host_scalars(metrics) -> dict:
             for k, v in metrics.items()}
 
 
+@dataclasses.dataclass(frozen=True)
+class FitOptions:
+    """Every ``fit`` knob in one value: ``fit(step, state, batches, n,
+    options=FitOptions(...))``.
+
+    Fields group into: **logging** (``log_every``, ``log_fn``,
+    ``sink``, ``close_sink``, ``callbacks``, ``recorder``), **control**
+    (``controller``, ``async_metrics``, ``donate``) and
+    **observability** (``tracer``, ``profiler``, ``layerwise_every``,
+    ``layerwise_names``, ``layerwise_history``). Defaults are exactly
+    the historical flat-kwarg defaults; semantics are documented on
+    :func:`fit`. The dataclass is frozen — build variants with
+    ``dataclasses.replace(options, ...)``."""
+    # logging
+    recorder: Optional[instrumentation.NormRecorder] = None
+    log_every: int = 0
+    log_fn: Callable = print
+    sink: Optional["sinks.MetricsSink"] = None
+    close_sink: bool = False
+    callbacks: Sequence = ()
+    # control
+    controller: object = None
+    async_metrics: Union[bool, int] = False
+    donate: Optional[bool] = None
+    # observability
+    tracer: Optional["obs_trace.Tracer"] = None
+    profiler: object = None
+    layerwise_every: int = 0
+    layerwise_names: Optional[Sequence[str]] = None
+    layerwise_history: Optional["obs_layerwise.LayerwiseHistory"] = None
+
+
+_FIT_FIELDS = tuple(f.name for f in dataclasses.fields(FitOptions))
+
+
+def _resolve_fit_options(options, kwargs) -> FitOptions:
+    """The deprecation shim: flat ``fit(..., sink=...)`` kwargs forward
+    into :class:`FitOptions` (warning once per call site); mixing both
+    spellings is an error, unknown names fail like the old signature
+    did."""
+    if not kwargs:
+        return options if options is not None else FitOptions()
+    unknown = sorted(set(kwargs) - set(_FIT_FIELDS))
+    if unknown:
+        raise TypeError(
+            f"fit() got unexpected keyword arguments {unknown}; "
+            f"valid FitOptions fields: {sorted(_FIT_FIELDS)}")
+    if options is not None:
+        raise TypeError(
+            "pass options=FitOptions(...) OR flat kwargs, not both "
+            f"(got options= and {sorted(kwargs)})")
+    warnings.warn(
+        "flat fit(...) keyword arguments are deprecated; pass "
+        "options=FitOptions(...) (fields and defaults are identical)",
+        DeprecationWarning, stacklevel=3)
+    return FitOptions(**kwargs)
+
+
 def fit(train_step: Optional[Callable], state: TrainState, batches,
         num_steps: int,
-        *, recorder: Optional[instrumentation.NormRecorder] = None,
-        log_every: int = 0, log_fn: Callable = print,
-        donate: Optional[bool] = None,
-        sink: Optional["sinks.MetricsSink"] = None,
-        callbacks: Sequence = (),
-        controller=None,
-        async_metrics: Union[bool, int] = False,
-        close_sink: bool = False,
-        tracer: Optional["obs_trace.Tracer"] = None,
-        profiler=None,
-        layerwise_every: int = 0,
-        layerwise_names: Optional[Sequence[str]] = None,
-        layerwise_history: Optional["obs_layerwise.LayerwiseHistory"] = None,
+        *, options: Optional[FitOptions] = None, **kwargs,
         ) -> tuple[TrainState, list[dict]]:
     """Host loop used by CPU-scale experiments. ``batches`` yields one
     pytree per *global* step: dict batches (LM) or tuples
@@ -428,7 +476,20 @@ def fit(train_step: Optional[Callable], state: TrainState, batches,
       ``labels.leaf_names(params)``) expands the arrays to
       ``layerwise/{segment}/{metric}`` scalars;
       ``layerwise_history=`` additionally offers each kept snapshot to
-      a :class:`repro.obs.LayerwiseHistory`."""
+      a :class:`repro.obs.LayerwiseHistory`.
+
+    All knobs live on :class:`FitOptions` (``options=``); the flat
+    keyword spellings above keep working through a deprecation shim
+    that forwards them into ``FitOptions`` unchanged."""
+    o = _resolve_fit_options(options, kwargs)
+    recorder, sink, callbacks = o.recorder, o.sink, o.callbacks
+    log_every, log_fn, close_sink = o.log_every, o.log_fn, o.close_sink
+    controller, async_metrics, donate = (o.controller, o.async_metrics,
+                                         o.donate)
+    tracer, profiler = o.tracer, o.profiler
+    layerwise_every = o.layerwise_every
+    layerwise_names = o.layerwise_names
+    layerwise_history = o.layerwise_history
     if controller is not None:
         if train_step is not None:
             raise ValueError(

@@ -1,0 +1,102 @@
+"""FitOptions consolidation: ``fit(..., options=FitOptions(...))`` is
+THE configuration surface, and the deprecated flat-kwarg spelling
+forwards into it bit-identically (same params, same history, same sink
+records) — the api_redesign contract for the trainer half of this PR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_optimizer
+from repro.data.synthetic import ClassificationData, batch_iterator
+from repro.diagnostics import sink as sink_lib
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+from repro.training import (FitOptions, TrainState, classifier_task,
+                            fit)
+from repro.training.trainer import make_train_step
+
+STEPS = 6
+DATA = ClassificationData(num_classes=4, image_size=8, seed=0)
+
+
+def _setup():
+    opt = build_optimizer("tvlars", total_steps=STEPS, learning_rate=0.5)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), in_dim=8 * 8 * 3,
+                                 num_classes=4, hidden=16, depth=2)
+    state = TrainState.create(params, opt)
+    step = make_train_step(classifier_task(apply_mlp_classifier), opt)
+    return step, state
+
+
+def _params_equal(a, b) -> bool:
+    return jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda x, y: bool(jnp.array_equal(x, y)), a, b))
+
+
+def test_flat_kwargs_equal_options_object():
+    """Old call == new call: identical final params and history."""
+    step, s1 = _setup()
+    _, s2 = _setup()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        s1, h1 = fit(step, s1, batch_iterator(DATA, 16), STEPS,
+                     log_every=0)
+    s2, h2 = fit(step, s2, batch_iterator(DATA, 16), STEPS,
+                 options=FitOptions(log_every=0))
+    assert _params_equal(s1.params, s2.params)
+    assert [r["loss"] for r in h1] == [r["loss"] for r in h2]
+
+
+def test_flat_kwargs_warn_deprecation():
+    step, state = _setup()
+    with pytest.warns(DeprecationWarning, match="FitOptions"):
+        fit(step, state, batch_iterator(DATA, 16), 1, log_every=0)
+
+
+def test_options_object_does_not_warn():
+    step, state = _setup()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        fit(step, state, batch_iterator(DATA, 16), 1,
+            options=FitOptions())
+
+
+def test_mixing_options_and_flat_kwargs_raises():
+    step, state = _setup()
+    with pytest.raises(TypeError, match="not both"):
+        fit(step, state, batch_iterator(DATA, 16), 1,
+            options=FitOptions(), log_every=1)
+
+
+def test_unknown_kwarg_raises():
+    step, state = _setup()
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        fit(step, state, batch_iterator(DATA, 16), 1, no_such_knob=1)
+
+
+def test_sink_records_identical_across_spellings(tmp_path):
+    step, s1 = _setup()
+    _, s2 = _setup()
+    old_path, new_path = str(tmp_path / "old.jsonl"), \
+        str(tmp_path / "new.jsonl")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with sink_lib.JsonlSink(old_path) as sink:
+            fit(step, s1, batch_iterator(DATA, 16), STEPS, sink=sink)
+    with sink_lib.JsonlSink(new_path) as sink:
+        fit(step, s2, batch_iterator(DATA, 16), STEPS,
+            options=FitOptions(sink=sink))
+    assert open(old_path).read() == open(new_path).read()
+
+
+def test_options_frozen_and_replaceable():
+    o = FitOptions(log_every=5)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        o.log_every = 10
+    assert dataclasses.replace(o, log_every=10).log_every == 10
+    assert o.log_every == 5

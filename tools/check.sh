@@ -24,6 +24,13 @@
 #      Perfetto render + trace-v1 schema validation + bench gate vs
 #      the committed benchmarks/baselines/BENCH_kernels.json
 #      (advisory: || true — wall-clock noise must not fail check)
+#   4g. serving tier (-m serving): continuous-batching engine ==
+#      per-request generate (greedy, staggered arrivals), batched
+#      prefill == token-by-token oracle, zero decode recompiles,
+#      paged KV reuse, mesh-restored weights — then the serve bench
+#      quick run (BENCH_serve.json: >=1.5x tokens/sec vs sequential,
+#      p50/p99 latency under Poisson load) + a serve launcher smoke,
+#      with an advisory gate vs baselines/BENCH_serve.json
 #   5. multidevice: mesh-native numerics on 8 fabricated CPU devices
 #      (shard_map train-step parity, DP controller (D,K) retargeting,
 #      cross-mesh checkpoint round-trips; the GSPMD-parity subprocess
@@ -87,6 +94,21 @@ python tools/validate_metrics.py experiments/bench/smoke_trace.jsonl \
 echo "== bench regression gate (advisory: compares against committed baseline) =="
 python tools/bench_compare.py benchmarks/baselines/BENCH_kernels.json \
     experiments/bench/BENCH_kernels.json || \
+    echo "bench_compare: ADVISORY failure (wall-clock noise is expected off dedicated hardware)"
+
+echo "== serving tier (-m serving: engine parity, paged KV reuse, compile-once decode) =="
+python -m pytest -q -m serving
+
+echo "== serve bench quick run (experiments/bench/BENCH_serve.json) =="
+PYTHONPATH="src:.:$PYTHONPATH" python benchmarks/bench_serve.py --quick
+
+echo "== serve launcher smoke (continuous-batching engine, mid-flight admission) =="
+python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 6 \
+    --prompt-len 12 --num-tokens 8 --slots 3
+
+echo "== serve bench regression gate (advisory) =="
+python tools/bench_compare.py benchmarks/baselines/BENCH_serve.json \
+    experiments/bench/BENCH_serve.json || \
     echo "bench_compare: ADVISORY failure (wall-clock noise is expected off dedicated hardware)"
 
 echo "== multidevice (8 fabricated CPU devices: shard_map parity, DP controller, sharded ckpts; GSPMD parity ran in tier 1) =="
