@@ -14,6 +14,17 @@ output length per request:
   engine's saturated request rate: per-request latency p50/p99 (ms)
   under load, the serving-facing number.
 
+The saturated run is phase-split via the engine's trace spans into
+``serve_engine_prefill`` / ``serve_engine_decode`` (tokens/sec per
+phase), and a second saturated pass with ``use_kernel=True`` records
+``serve_decode_kernel``: decode-phase kernel-vs-jnp speedup plus the
+analytic HBM bytes/token model from
+``kernels.attention_decode.modeled_decode_hbm_bytes``. The kernel pass
+must be token-for-token identical to the jnp pass; the >= 1.15x
+decode-speedup floor is asserted only on accelerator backends
+(tpu/gpu) and reported otherwise — on CPU the kernel runs through the
+Pallas interpreter, which measures dispatch, not memory traffic.
+
 Writes ``experiments/bench/BENCH_serve.json`` (bench/v2); the
 committed ``benchmarks/baselines/BENCH_serve.json`` feeds
 ``tools/bench_compare.py`` in CI (advisory, like the kernel gate).
@@ -21,6 +32,7 @@ committed ``benchmarks/baselines/BENCH_serve.json`` feeds
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -30,11 +42,14 @@ import numpy as np
 from benchmarks import common
 from repro import serving
 from repro.configs import get_smoke_config
+from repro.kernels.attention_decode import modeled_decode_hbm_bytes
 from repro.models import get_model
+from repro.obs import trace as obs_trace
 
 ARCH = "qwen2.5-3b"
 PROMPT_LENS = (4, 6, 8, 12)
 SPEEDUP_FLOOR = 1.5
+DECODE_KERNEL_FLOOR = 1.15
 
 
 def make_requests(n: int, vocab: int):
@@ -69,17 +84,30 @@ def sequential_baseline(model, params, prompts, num_tokens, max_len):
 
 
 def saturated_engine(model, params, sc, prompts, num_tokens):
-    eng = serving.Engine(model, params, sc)
+    tracer = obs_trace.Tracer()
+    eng = serving.Engine(model, params, sc, tracer=tracer)
     # warm every compile path (prefill buckets + the one decode step)
     for p in prompts[: sc.prefill_batch]:
         eng.submit(p, max_new_tokens=2)
     eng.drain()
+    tracer.drain()                     # drop warmup spans
     t0 = time.perf_counter()
     ids = [eng.submit(p, max_new_tokens=num_tokens) for p in prompts]
     eng.drain()
     elapsed = time.perf_counter() - t0
     outs = [eng.result(rid).tokens for rid in ids]
-    return outs, elapsed, eng
+    return outs, elapsed, eng, tracer
+
+
+def phase_split(tracer, total_tokens, n_requests):
+    """(prefill_s, decode_s, decode_tokens) from the engine spans.
+    Each request's first token comes out of prefill; the rest are
+    decode-phase (``decode`` dispatch + ``sample`` device sync)."""
+    ph = obs_trace.phase_summary(tracer.events())
+    prefill_s = ph.get("prefill", {}).get("total_ms", 0.0) / 1e3
+    decode_s = sum(ph.get(k, {}).get("total_ms", 0.0)
+                   for k in ("decode", "sample")) / 1e3
+    return prefill_s, decode_s, total_tokens - n_requests
 
 
 def poisson_engine(model, params, sc, prompts, num_tokens, rate_rps):
@@ -138,8 +166,8 @@ def main() -> None:
 
     seq_out, seq_s = sequential_baseline(model, params, prompts,
                                          num_tokens, sc.max_len)
-    eng_out, eng_s, eng = saturated_engine(model, params, sc, prompts,
-                                           num_tokens)
+    eng_out, eng_s, eng, eng_tr = saturated_engine(model, params, sc,
+                                                   prompts, num_tokens)
     assert eng_out == seq_out, \
         "engine tokens diverged from sequential generate"
     assert eng.decode_compilations == 1, eng.stats()
@@ -155,6 +183,32 @@ def main() -> None:
                   decode_compilations=eng.decode_compilations,
                   prefill_compilations=eng.prefill_compilations)
 
+    # phase split (trace spans) + fused-kernel decode sweep
+    pf_s, dec_s, dec_toks = phase_split(eng_tr, total, n)
+    common.record("serve_engine_prefill", 1e6 * pf_s / n,
+                  tokens_per_s=round(n / pf_s, 1), first_tokens=n)
+    common.record("serve_engine_decode", 1e6 * dec_s / dec_toks,
+                  tokens_per_s=round(dec_toks / dec_s, 1),
+                  decode_tokens=dec_toks)
+
+    sck = dataclasses.replace(sc, use_kernel=True)
+    k_out, _, k_eng, k_tr = saturated_engine(model, params, sck,
+                                             prompts, num_tokens)
+    assert k_out == eng_out, \
+        "kernel-path engine tokens diverged from the jnp path"
+    assert k_eng.decode_compilations == 1, k_eng.stats()
+    _, k_dec_s, _ = phase_split(k_tr, total, n)
+    decode_speedup = dec_s / k_dec_s
+    hbm = modeled_decode_hbm_bytes(cfg, sc.max_len)
+    enforce = jax.default_backend() in ("tpu", "gpu")
+    common.record("serve_decode_kernel", 1e6 * k_dec_s / dec_toks,
+                  tokens_per_s=round(dec_toks / k_dec_s, 1),
+                  decode_speedup=round(decode_speedup, 2),
+                  floor=DECODE_KERNEL_FLOOR, floor_enforced=enforce,
+                  modeled_hbm_bytes_per_token=hbm["fused"],
+                  modeled_hbm_bytes_per_token_jnp=hbm["jnp"],
+                  modeled_hbm_ratio=round(hbm["jnp"] / hbm["fused"], 2))
+
     rate = 0.7 * (n / eng_s)
     po_s, p50, p99, po_toks = poisson_engine(model, params, sc, prompts,
                                              num_tokens, rate)
@@ -167,12 +221,24 @@ def main() -> None:
         "BENCH_serve", suite="serve",
         extra={"arch": ARCH, "slots": sc.slots, "max_len": sc.max_len,
                "page_size": sc.page_size, "num_tokens": num_tokens,
-               "speedup_floor": SPEEDUP_FLOOR})
+               "speedup_floor": SPEEDUP_FLOOR,
+               "decode_kernel_floor": DECODE_KERNEL_FLOOR})
     print(f"wrote {path}")
     assert speedup >= SPEEDUP_FLOOR, (
         f"continuous batching speedup {speedup:.2f}x below the "
         f"{SPEEDUP_FLOOR}x acceptance floor")
     print(f"speedup {speedup:.2f}x >= {SPEEDUP_FLOOR}x: OK")
+    if enforce:
+        assert decode_speedup >= DECODE_KERNEL_FLOOR, (
+            f"fused decode speedup {decode_speedup:.2f}x below the "
+            f"{DECODE_KERNEL_FLOOR}x floor")
+        print(f"decode kernel {decode_speedup:.2f}x >= "
+              f"{DECODE_KERNEL_FLOOR}x: OK")
+    else:
+        print(f"decode kernel {decode_speedup:.2f}x vs jnp "
+              f"(interpret mode — {DECODE_KERNEL_FLOOR}x floor "
+              f"enforced on tpu/gpu only); modeled HBM ratio "
+              f"{hbm['jnp'] / hbm['fused']:.2f}x")
 
 
 if __name__ == "__main__":

@@ -84,6 +84,10 @@ class ModelConfig:
     compute_dtype: str = "float32"
     remat: bool = True
 
+    # serving / decode
+    use_decode_kernel: bool = False    # fused Pallas attention-decode
+    kv_cache_dtype: Optional[str] = None   # KV pool storage (None=compute)
+
     # ----- derived -----
     @property
     def head_dim_(self) -> int:
@@ -105,6 +109,10 @@ class ModelConfig:
     @property
     def cdtype(self):
         return jnp.dtype(self.compute_dtype)
+
+    @property
+    def kv_dtype(self):
+        return jnp.dtype(self.kv_cache_dtype or self.compute_dtype)
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -22,6 +22,7 @@ import os
 import jax
 
 from repro.kernels import ref
+from repro.kernels.attention_decode import attention_decode_pallas
 from repro.kernels.lars_update import lars_update_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.segmented_update import segmented_update_pallas
@@ -72,6 +73,22 @@ def rmsnorm(x, weight, *, eps: float = 1e-6):
     if _force_ref():
         return ref.ref_rmsnorm(x, weight, eps=eps)
     return rmsnorm_pallas(x, weight, eps=eps, interpret=_interpret())
+
+
+def attention_decode_fused(q, new_k, new_v, k_cache, v_cache, pos, *,
+                           window=None):
+    """Fused serving-decode attention: per-row KV ring append +
+    mask-from-``pos`` + online-softmax GQA contraction in one launch.
+    q [B,1,H,Dh], new_k/new_v [B,1,Hkv,Dh] (rope'd), caches
+    [B,T,Hkv,Dh], pos [B] int32 -> (out, new_k_cache, new_v_cache);
+    see ``kernels.ref.decode_parity_tolerance`` for the parity model.
+    """
+    if _force_ref():
+        return ref.ref_attention_decode(q, new_k, new_v, k_cache,
+                                        v_cache, pos, window=window)
+    return attention_decode_pallas(q, new_k, new_v, k_cache, v_cache,
+                                   pos, window=window,
+                                   interpret=_interpret())
 
 
 def count_pallas_calls(jaxpr) -> int:

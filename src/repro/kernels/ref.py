@@ -32,6 +32,8 @@ bound for comparing a low-precision policy against the f32 reference.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -312,3 +314,69 @@ def ref_rmsnorm(x: jnp.ndarray, weight: jnp.ndarray,
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
     y = x32 / jnp.sqrt(var + eps)
     return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused attention-decode oracle — matches kernels/attention_decode.py
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0e38  # f32-safe mask value (matches models.layers)
+
+
+def decode_parity_tolerance(cache_dtype) -> dict:
+    """Documented bound for fused-decode attention parity.
+
+    * Kernel ≡ oracle ≡ jnp ``attention_decode`` at the SAME cache
+      dtype: all three upcast the identical stored KV values to f32
+      and accumulate scores/softmax/probs·V strictly in f32, so the
+      only divergence is reassociation (online blockwise softmax vs
+      one global softmax) — bounded at 1e-5 on O(1) outputs for any
+      storage dtype.
+    * bf16 cache vs an f32-cache reference (the accumulation-fix
+      test): each KV operand is rounded once to bf16 (8-bit mantissa,
+      <= 2^-8 relative) before the f32 math, so the attention output
+      carries a few-ulp-of-bf16 relative error — ``4·2^-8`` with a
+      matching absolute floor.
+    """
+    if jnp.dtype(cache_dtype) == jnp.dtype(jnp.bfloat16):
+        eps = 2.0 ** -8
+        return {"rtol": 4 * eps, "atol": 4 * eps}
+    return {"rtol": 1e-5, "atol": 1e-5}
+
+
+def ref_attention_decode(q, new_k, new_v, k_cache, v_cache, pos, *,
+                         window=None):
+    """Pure-jnp oracle for the fused decode step, same operand layout
+    as ``attention_decode_pallas``: q [B,1,H,Dh], new_k/new_v
+    [B,1,Hkv,Dh] (both already rope'd), caches [B,T,Hkv,Dh], pos [B]
+    int32 per-row depths. Per-row ring append at ``pos % T`` (windowed)
+    or ``pos`` (global), validity mask derived from ``pos``, grouped
+    contraction with f32 scores/softmax/accumulation. Returns
+    (out [B,1,H,Dh], new_k_cache, new_v_cache).
+    """
+    b, _, h, dh = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = pos % t if window is not None else pos
+
+    def write(cache, new):
+        return jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
+            c, n, s, axis=0))(cache, new.astype(cache.dtype), slot)
+
+    kc, vc = write(k_cache, new_k), write(v_cache, new_v)
+    kpos = jnp.arange(t)[None, :]                      # [1,T]
+    pos_c, slot_c = pos[:, None], slot[:, None]
+    if window is not None:
+        wraps = (pos_c // t) * t
+        abs_pos = kpos + jnp.where(kpos <= slot_c, wraps, wraps - t)
+        ok = (abs_pos >= 0) & (abs_pos <= pos_c) \
+            & (abs_pos > pos_c - window)
+    else:
+        ok = kpos <= pos_c                             # [B,T]
+    qg = q.astype(jnp.float32).reshape(b, hkv, h // hkv, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, kc.astype(jnp.float32)) \
+        / math.sqrt(dh)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, vc.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype), kc, vc

@@ -9,6 +9,11 @@ KV cache, batched prefill admission), submits an open set of requests
 batching — and reports throughput plus the engine's compile/page
 accounting. ``--restore DIR`` loads weights through the sharding-aware
 checkpoint reader onto the requested mesh instead of initialising.
+
+``--use-kernel`` routes decode attention through the fused Pallas
+kernel, ``--cache-dtype bfloat16`` stores the KV pool in bf16, and
+``--trace-out PATH`` exports per-phase engine spans
+(admit/prefill/decode/sample/finish) as trace-v1 JSONL.
 """
 from __future__ import annotations
 
@@ -21,9 +26,11 @@ import numpy as np
 
 from repro import serving
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.diagnostics import sink as diag_sink
 from repro.launch import sharding
 from repro.launch.mesh import make_host_mesh
 from repro.models import extra_embed_shape, get_model
+from repro.obs import trace as obs_trace
 
 
 def main() -> None:
@@ -40,6 +47,13 @@ def main() -> None:
                     help="checkpoint dir to restore params from")
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="fused Pallas attention-decode kernel")
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=("float32", "bfloat16"),
+                    help="KV pool storage dtype (default: compute dtype)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write engine phase spans (trace-v1 JSONL)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -50,7 +64,9 @@ def main() -> None:
     sc = serving.ServeConfig(
         slots=args.slots, max_len=pages * args.page_size,
         page_size=args.page_size, prefill_batch=args.slots,
-        sampling=serving.SamplingParams(temperature=args.temperature))
+        sampling=serving.SamplingParams(temperature=args.temperature),
+        use_kernel=args.use_kernel, cache_dtype=args.cache_dtype)
+    tracer = obs_trace.Tracer() if args.trace_out else obs_trace.NULL
 
     extra = None
     es = extra_embed_shape(cfg, sc.slots)
@@ -61,7 +77,8 @@ def main() -> None:
         if args.restore:
             eng = serving.Engine.from_checkpoint(
                 args.restore, model, sc,
-                mesh=mesh if mesh.size > 1 else None, extra=extra)
+                mesh=mesh if mesh.size > 1 else None, extra=extra,
+                tracer=tracer)
         else:
             params = model.init(jax.random.PRNGKey(0))
             if mesh.size > 1:
@@ -69,7 +86,8 @@ def main() -> None:
                     mesh, sharding.state_pspecs(mesh, jax.eval_shape(
                         lambda: params)))
                 params = jax.device_put(params, params_sh)
-            eng = serving.Engine(model, params, sc, extra=extra)
+            eng = serving.Engine(model, params, sc, extra=extra,
+                                 tracer=tracer)
 
         rng = np.random.RandomState(0)
         prompts = [rng.randint(1, cfg.vocab_size, size=args.prompt_len)
@@ -98,6 +116,15 @@ def main() -> None:
           f"{stats['allocations']} allocs, {stats['reused_pages']} "
           f"reused")
     print("sample:", results[0].tokens[:16])
+    if args.trace_out:
+        summary = obs_trace.phase_summary(tracer.events())
+        for name, row in summary.items():
+            print(f"  span {name}: n={row['count']} "
+                  f"total={row['total_ms']:.1f}ms "
+                  f"mean={row['mean_us']:.0f}us")
+        with diag_sink.JsonlSink(args.trace_out) as tsink:
+            n_trace = tracer.export(tsink)
+        print(f"trace -> {args.trace_out} ({n_trace} records)")
 
 
 if __name__ == "__main__":

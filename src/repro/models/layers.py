@@ -237,16 +237,23 @@ def gqa_scores_apply(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         # partial max/sum + all-reduce.
         grp = h // hkv
         qg = q.reshape(b, 1, hkv, grp, dh)
-        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k
-                            ).astype(jnp.float32) / math.sqrt(dh)
+        # scores/softmax/probs·V accumulate strictly in f32 whatever
+        # the cache storage dtype (bf16 caches used to contract in
+        # bf16 here) — the fused decode kernel does the same by
+        # construction, so the two paths share one numerics model
+        # (kernels.ref.decode_parity_tolerance).
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                            preferred_element_type=jnp.float32
+                            ) / math.sqrt(dh)
         if isinstance(mask, tuple):
             raise ValueError("decode path expects an explicit mask")
         if mask is not None:
             # mask: [1,1,1,T] additive -> broadcast over (kv, grp)
             scores = scores + mask[:, :, None]
-        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-        out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
-        return out.reshape(b, 1, h, dh)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, 1, h, dh).astype(q.dtype)
 
     if hkv != h:
         rep = h // hkv
@@ -372,7 +379,8 @@ def _write_row(cache: jnp.ndarray, new: jnp.ndarray,
 def attention_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
                      k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      pos: jnp.ndarray, *, window: Optional[int] = None,
-                     use_rope: bool = True):
+                     use_rope: bool = True,
+                     use_kernel: Optional[bool] = None):
     """One-token decode. x: [B,1,D]; caches [B,T,Hkv,Dh]; pos: scalar
     (all rows at the same depth — the training-era path) OR a [B] int32
     vector of per-row depths — the serving engine's continuous-batching
@@ -383,6 +391,12 @@ def attention_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
     For windowed layers the cache is a ring buffer of size ``window``
     (write slot = pos % window) and RoPE uses absolute positions.
     Returns (out [B,1,D], new_k_cache, new_v_cache).
+
+    ``use_kernel`` (default ``cfg.use_decode_kernel``) routes the
+    cache write + mask + contraction through the fused Pallas decode
+    kernel (``repro.kernels.ops.attention_decode_fused`` — one launch
+    per layer, KV read exactly once, f32 online softmax); projections
+    and RoPE stay here so kernel and jnp paths share them exactly.
     """
     b = x.shape[0]
     t = k_cache.shape[1]
@@ -393,6 +407,16 @@ def attention_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
     if use_rope:
         q = rope(q, posb, cfg.rope_theta)
         k = rope(k, posb, cfg.rope_theta)
+    if use_kernel is None:
+        use_kernel = cfg.use_decode_kernel
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        posv = pos if vec else jnp.full((b,), pos, jnp.int32)
+        out, k_cache, v_cache = kernel_ops.attention_decode_fused(
+            q, k, v, k_cache, v_cache, posv, window=window)
+        out = jnp.einsum("bshk,hkd->bsd", out,
+                         params["wo"].astype(x.dtype))
+        return out, k_cache, v_cache
     slot = pos % t if window is not None else pos
     if vec:
         k_cache = _write_row(k_cache, k, slot)

@@ -12,7 +12,12 @@ architecture:
 
 ``decode_step``'s ``pos`` is a scalar (all rows at the same depth) or a
 [B] vector of per-row depths — the serving engine's continuous-batching
-decode. ``prefill`` is the single-shot batched prefill (one
+decode. Two ``ModelConfig`` knobs specialize the decode path without
+changing this signature: ``use_decode_kernel`` routes each layer's
+attention through the fused Pallas decode kernel
+(``kernels.attention_decode``) and ``kv_cache_dtype`` sets the KV pool
+storage dtype (``init_cache``/``prefill`` honor it; decode accumulates
+in f32 either way). ``prefill`` is the single-shot batched prefill (one
 full-sequence forward + KV-cache dump); it is ``None`` for families
 without a batched-prefill lowering (ssm/hybrid/encdec fall back to the
 token-by-token reference loop in ``repro.serving.decode``).

@@ -283,8 +283,8 @@ def init_lm_cache(cfg: ModelConfig, params: dict, batch: int, max_len: int,
                   extra_embeds: Optional[jnp.ndarray] = None) -> dict:
     groups, kinds = _group_spec(cfg)
     hkv, hd = cfg.num_kv_heads, cfg.head_dim_
-    dt = cfg.cdtype
-    cache: dict[str, Any] = {}
+    dt = cfg.kv_dtype            # pool storage (bf16 pools stay bf16;
+    cache: dict[str, Any] = {}   # decode upcasts to f32 on read)
     for i, kind in enumerate(kinds):
         name = f"l{i}_{kind}"
         if kind == "cross":
@@ -317,7 +317,9 @@ def _prefill_cache_layout(cfg: ModelConfig, kind: str, k: jnp.ndarray,
     new key at the row's depth BEFORE attending, so pad-position keys
     are overwritten or masked, never read."""
     g, b, s, hkv, hd = k.shape
-    if kind == "local" and cfg.sliding_window:
+    k = k.astype(cfg.kv_dtype)   # prefill dump lands at pool storage
+    v = v.astype(cfg.kv_dtype)   # dtype (same rounding as decode's
+    if kind == "local" and cfg.sliding_window:   # cache-row writes)
         t = min(cfg.sliding_window, max_len)
         last = (jnp.full((b,), s, jnp.int32) if lens is None
                 else lens.astype(jnp.int32))[:, None] - 1   # [B,1]

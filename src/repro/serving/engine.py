@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace
 from repro.serving import sampling
 from repro.serving.kv_cache import PagedKVCache
 
@@ -57,6 +58,11 @@ class ServeConfig:
         into whole pages.
     prefill_batch: max requests admitted in one batched prefill.
     sampling: :class:`repro.serving.SamplingParams` (default greedy).
+    use_kernel: route decode attention through the fused Pallas
+        kernel (``kernels.attention_decode``: KV ring append +
+        mask-from-pos + online-softmax GQA, one launch per layer).
+    cache_dtype: KV pool storage dtype override (e.g. "bfloat16" to
+        halve pool bytes; decode accumulates in f32 either way).
     """
     slots: int = 8
     max_len: int = 256
@@ -64,10 +70,19 @@ class ServeConfig:
     prefill_batch: int = 4
     sampling: sampling.SamplingParams = dataclasses.field(
         default_factory=sampling.SamplingParams)
+    use_kernel: bool = False
+    cache_dtype: Optional[str] = None
 
     def __post_init__(self):
         if self.slots < 1:
             raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.cache_dtype is not None:
+            try:
+                jnp.dtype(self.cache_dtype)
+            except TypeError as e:
+                raise ValueError(
+                    f"cache_dtype {self.cache_dtype!r} is not a "
+                    f"dtype") from e
         if self.page_size < 1:
             raise ValueError(
                 f"page_size must be >= 1, got {self.page_size}")
@@ -119,7 +134,7 @@ class Engine:
     """
 
     def __init__(self, model, params, config: ServeConfig, *,
-                 extra=None):
+                 extra=None, tracer=None):
         if model.prefill is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no batched-prefill "
@@ -130,6 +145,16 @@ class Engine:
                 f"family {model.cfg.family!r} needs an extra-embeddings "
                 f"frontend; pass extra= (one [slots, ...] block) or "
                 f"serve a text-only family")
+        if config.use_kernel or config.cache_dtype:
+            # rebuild on a cfg carrying the serving overrides (params
+            # are flag-independent, so the caller's tree is reused)
+            from repro.models import get_model
+            model = get_model(model.cfg.replace(
+                use_decode_kernel=config.use_kernel
+                or model.cfg.use_decode_kernel,
+                kv_cache_dtype=config.cache_dtype
+                or model.cfg.kv_cache_dtype))
+        self.tracer = trace.NULL if tracer is None else tracer
         self.model = model
         self.params = params
         self.config = config
@@ -160,8 +185,8 @@ class Engine:
 
     @classmethod
     def from_checkpoint(cls, path: str, model, config: ServeConfig, *,
-                        mesh=None, shardings=None, extra=None
-                        ) -> "Engine":
+                        mesh=None, shardings=None, extra=None,
+                        tracer=None) -> "Engine":
         """Build an engine from a trained checkpoint of the param tree.
 
         Restores through the sharding-aware reader: the payload is
@@ -172,7 +197,7 @@ class Engine:
         template = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         params = checkpoint.restore(path, template, mesh=mesh,
                                     shardings=shardings)
-        return cls(model, params, config, extra=extra)
+        return cls(model, params, config, extra=extra, tracer=tracer)
 
     # -- jitted computations ----------------------------------------------
 
@@ -226,24 +251,39 @@ class Engine:
         return rid
 
     def step(self) -> list[RequestResult]:
-        """One scheduler iteration: admit -> decode -> finish."""
-        finished = self._admit()
+        """One scheduler iteration: admit -> decode -> finish.
+
+        Each phase records a trace-v1 span (``admit`` wraps the
+        scheduler move incl. the ``prefill`` device call inside it;
+        ``decode`` is the async dispatch, ``sample`` the device sync
+        that materializes the sampled tokens, ``finish`` the host
+        bookkeeping) — ``launch/serve.py --trace-out`` exports them
+        through the run-wide trace tooling."""
+        tr = self.tracer
+        with tr.span("admit", step=self._steps,
+                     waiting=len(self._waiting)):
+            finished = self._admit()
         if any(r is not None for r in self._active):
             tok = jnp.asarray(self._tok[:, None])
             pos = jnp.asarray(self._pos)
-            nxt, self._kv.cache = self._decode(
-                self.params, self._kv.cache, tok, pos, self._fold_key())
-            nxt = np.asarray(nxt)
-            for s, req in enumerate(self._active):
-                if req is None:
-                    continue
-                req.tokens.append(int(nxt[s]))
-                self._tok[s] = nxt[s]
-                self._pos[s] += 1
-                self._tokens_generated += 1
-                self._kv.table.ensure(s, int(self._pos[s]) + 1)
-                if len(req.tokens) >= req.max_new_tokens:
-                    finished.append(self._finish(s, done=True))
+            with tr.span("decode", step=self._steps,
+                         active=self.active_count):
+                nxt, self._kv.cache = self._decode(
+                    self.params, self._kv.cache, tok, pos,
+                    self._fold_key())
+            with tr.span("sample", step=self._steps):
+                nxt = np.asarray(nxt)
+            with tr.span("finish", step=self._steps):
+                for s, req in enumerate(self._active):
+                    if req is None:
+                        continue
+                    req.tokens.append(int(nxt[s]))
+                    self._tok[s] = nxt[s]
+                    self._pos[s] += 1
+                    self._tokens_generated += 1
+                    self._kv.table.ensure(s, int(self._pos[s]) + 1)
+                    if len(req.tokens) >= req.max_new_tokens:
+                        finished.append(self._finish(s, done=True))
         self._steps += 1
         return finished
 
@@ -304,10 +344,12 @@ class Engine:
         for i, (req, _) in enumerate(batch):
             tokens[i, :req.prompt.size] = req.prompt
             lens[i] = req.prompt.size
-        first, pf_cache = self._prefill_for(nb, lb)(
-            self.params, jnp.asarray(tokens), jnp.asarray(lens),
-            self._fold_key())
-        first = np.asarray(first)
+        with self.tracer.span("prefill", step=self._steps, batch=nb,
+                              length=lb):
+            first, pf_cache = self._prefill_for(nb, lb)(
+                self.params, jnp.asarray(tokens), jnp.asarray(lens),
+                self._fold_key())
+            first = np.asarray(first)
         finished = []
         for i, (req, slot) in enumerate(batch):
             self._kv.insert(pf_cache, i, slot)

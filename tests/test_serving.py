@@ -25,7 +25,10 @@ import pytest
 
 from repro import serving
 from repro.configs import get_smoke_config
-from repro.models import get_model
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.models import get_model, layers
 
 pytestmark = pytest.mark.serving
 
@@ -233,13 +236,174 @@ def test_engine_rejects_families_without_prefill():
         serving.Engine(model, params, serving.ServeConfig())
 
 
-# -- checkpoint restore ---------------------------------------------------
-
 def _serve_some(eng, prompts, new=4):
     ids = [eng.submit(p, max_new_tokens=new) for p in prompts]
     eng.drain()
     return [eng.result(i).tokens for i in ids]
 
+
+# -- fused decode kernel: kernel == oracle == jnp -------------------------
+
+def _decode_operands(b, t, h, hkv, dh, cache_dtype, pos, seed=0):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(b, 1, h, dh), jnp.float32)
+    nk = jnp.asarray(rng.randn(b, 1, hkv, dh), jnp.float32)
+    nv = jnp.asarray(rng.randn(b, 1, hkv, dh), jnp.float32)
+    kc = jnp.asarray(rng.randn(b, t, hkv, dh)).astype(cache_dtype)
+    vc = jnp.asarray(rng.randn(b, t, hkv, dh)).astype(cache_dtype)
+    return q, nk, nv, kc, vc, jnp.asarray(pos, jnp.int32)
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 2), (4, 1), (2, 2)])
+@pytest.mark.parametrize("window", [None, 8])
+@pytest.mark.parametrize("cache_dtype", ["float32", "bfloat16"])
+def test_decode_kernel_matches_oracle(h, hkv, window, cache_dtype):
+    """Op-level three-way parity across GQA/MQA/MHA layouts, global and
+    ring-buffer layers, f32 and bf16 pools.  Windowed rows sit several
+    multiples past the window (deep wrap); caches must be bitwise
+    identical (same single-row append), outputs within the documented
+    tolerance."""
+    dt = jnp.dtype(cache_dtype)
+    t = 8 if window else 32
+    pos = [0, 9, 30] if window else [0, 5, 31]
+    operands = _decode_operands(3, t, h, hkv, 16, dt, pos)
+    o1, k1, v1 = kernel_ops.attention_decode_fused(*operands,
+                                                   window=window)
+    o2, k2, v2 = kernel_ref.ref_attention_decode(*operands,
+                                                 window=window)
+    tol = kernel_ref.decode_parity_tolerance(dt)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), **tol)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_layer_decode_kernel_matches_jnp():
+    """``attention_decode(use_kernel=True)`` == the jnp path through
+    the full layer (projections + RoPE shared): windowed vector pos
+    with deep wrap, global vector pos, and scalar pos."""
+    cfg = ModelConfig(d_model=64, num_heads=4, num_kv_heads=2,
+                      head_dim=16)
+    params = layers.init_attention(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(3, 1, 64), jnp.float32)
+    tol = kernel_ref.decode_parity_tolerance(jnp.float32)
+    cases = [(None, 32, jnp.asarray([0, 5, 31], jnp.int32)),
+             (8, 8, jnp.asarray([2, 29, 17], jnp.int32)),
+             (8, 8, jnp.int32(19))]
+    for window, t, pos in cases:
+        kc = jnp.asarray(rng.randn(3, t, 2, 16), jnp.float32)
+        vc = jnp.asarray(rng.randn(3, t, 2, 16), jnp.float32)
+        o1, k1, v1 = layers.attention_decode(params, cfg, x, kc, vc,
+                                             pos, window=window,
+                                             use_kernel=True)
+        o2, k2, v2 = layers.attention_decode(params, cfg, x, kc, vc,
+                                             pos, window=window,
+                                             use_kernel=False)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   **tol)
+        np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_bf16_cache_decode_accumulates_f32():
+    """A bf16 KV pool must still contract and softmax in f32: decode
+    against a bf16 pool stays within bf16 resolution of the f32-pool
+    result (would blow past the tolerance if scores accumulated in
+    bf16)."""
+    cfg = ModelConfig(d_model=64, num_heads=4, num_kv_heads=2,
+                      head_dim=16)
+    params = layers.init_attention(cfg, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(2, 1, 64), jnp.float32)
+    kc = jnp.asarray(rng.randn(2, 32, 2, 16), jnp.float32)
+    vc = jnp.asarray(rng.randn(2, 32, 2, 16), jnp.float32)
+    pos = jnp.asarray([12, 31], jnp.int32)
+    tol = kernel_ref.decode_parity_tolerance(jnp.bfloat16)
+    want, _, _ = layers.attention_decode(params, cfg, x, kc, vc, pos,
+                                         use_kernel=False)
+    for use_kernel in (False, True):
+        got, _, _ = layers.attention_decode(
+            params, cfg, x, kc.astype(jnp.bfloat16),
+            vc.astype(jnp.bfloat16), pos, use_kernel=use_kernel)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol)
+
+
+def test_engine_windowed_wraparound_staggered():
+    """jnp-path engine parity with positions several multiples past the
+    sliding window: staggered arrivals make each slot's ring buffer
+    wrap at a different step (gemma3 smoke window=8, depths reach
+    ~4x window)."""
+    cfg, model, params = _model("gemma3-12b")
+    sc = serving.ServeConfig(slots=3, max_len=64, page_size=8,
+                             prefill_batch=2)
+    eng = serving.Engine(model, params, sc)
+    prompts = _prompts(cfg, (5, 9, 3), seed=7)
+    new = [25, 20, 30]
+    got = _run_staggered(eng, prompts, new, {0: [0, 1], 4: [2]})
+    for i, p in enumerate(prompts):
+        want = _reference(model, params, p, new[i], sc.max_len)
+        assert got[i] == want, f"req {i}: {got[i]} != {want}"
+
+
+def test_engine_kernel_matches_generate_staggered():
+    """Engine with the fused kernel == per-request jnp ``generate``
+    token-for-token (greedy), staggered arrivals, depths past 3x the
+    gemma3 window so both global and wrapped ring layers are hit."""
+    cfg, model, params = _model("gemma3-12b")
+    sc = serving.ServeConfig(slots=3, max_len=64, page_size=8,
+                             prefill_batch=2, use_kernel=True)
+    eng = serving.Engine(model, params, sc)
+    prompts = _prompts(cfg, (5, 9, 3, 7), seed=11)
+    new = [22, 18, 25, 20]
+    got = _run_staggered(eng, prompts, new, {0: [0, 1], 3: [2, 3]})
+    for i, p in enumerate(prompts):
+        want = _reference(model, params, p, new[i], sc.max_len)
+        assert got[i] == want, f"kernel req {i}: {got[i]} != {want}"
+
+
+def test_engine_kernel_zero_decode_recompiles():
+    """The fused kernel keys on the fixed [slots, max_len] pool: one
+    decode compilation across admit / evict / finish / re-admit."""
+    cfg, model, params = _model("gemma3-12b")
+    sc = serving.ServeConfig(slots=2, max_len=32, page_size=8,
+                             prefill_batch=2, use_kernel=True)
+    eng = serving.Engine(model, params, sc)
+    prompts = _prompts(cfg, (4, 6, 5, 7), seed=13)
+    a = eng.submit(prompts[0], max_new_tokens=4)
+    eng.submit(prompts[1], max_new_tokens=9)
+    eng.step()
+    eng.evict(a)
+    eng.submit(prompts[2], max_new_tokens=3)
+    eng.step()
+    eng.drain()
+    eng.submit(prompts[3], max_new_tokens=2)
+    eng.drain()
+    assert eng.decode_compilations == 1, eng.stats()
+
+
+def test_engine_kernel_bf16_cache_matches_jnp():
+    """bf16 KV pool: kernel path and jnp path sample identical greedy
+    tokens (both read the same bf16 values, both accumulate in f32)."""
+    cfg, model, params = _model("gemma3-12b")
+    kw = dict(slots=2, max_len=32, page_size=8, prefill_batch=2,
+              cache_dtype="bfloat16")
+    prompts = _prompts(cfg, (6, 9), seed=17)
+    want = _serve_some(serving.Engine(
+        model, params, serving.ServeConfig(**kw)), prompts, new=12)
+    got = _serve_some(serving.Engine(
+        model, params, serving.ServeConfig(**kw, use_kernel=True)),
+        prompts, new=12)
+    assert got == want
+
+
+def test_serve_config_rejects_bad_cache_dtype():
+    with pytest.raises(ValueError, match="cache_dtype"):
+        serving.ServeConfig(cache_dtype="float7")
+
+
+# -- checkpoint restore ---------------------------------------------------
 
 def test_mesh_restored_weights_serve_identically(tmp_path):
     from repro import checkpoint
